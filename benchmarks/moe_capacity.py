@@ -1,0 +1,43 @@
+"""Ablation: MoE capacity factor → token-drop rate (the train/serve
+consistency trade documented in DESIGN.md §5b)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def drop_rate(T: int, E: int, K: int, cf: float, seed: int = 0) -> float:
+    """Fraction of (token, choice) assignments dropped at capacity
+    ceil(T·K/E·cf) under uniform-random routing (the worst realistic case —
+    a trained, balanced router drops less)."""
+    rng = np.random.default_rng(seed)
+    cap = max(4, int(np.ceil(T * K / E * cf) + 3) // 4 * 4)
+    eidx = rng.integers(0, E, size=(T, K))
+    counts = np.zeros(E, np.int64)
+    dropped = 0
+    for t in range(T):
+        for k in range(K):
+            e = eidx[t, k]
+            if counts[e] >= cap:
+                dropped += 1
+            else:
+                counts[e] += 1
+    return dropped / (T * K)
+
+
+def main(emit) -> None:
+    for label, E, K in (("qwen3", 128, 8), ("dbrx", 16, 4), ("jamba", 16, 2)):
+        for cf in (1.0, 1.25, 2.0):
+            t0 = time.perf_counter()
+            r = drop_rate(4096, E, K, cf)
+            emit(f"moe_capacity/{label}_cf{cf}", (time.perf_counter() - t0) * 1e6,
+                 f"drop_rate={r:.4f}")
+
+
+if __name__ == "__main__":
+    def p(n, u, d):
+        print(f"{n},{u:.1f},{d}")
+    main(p)

@@ -1,0 +1,30 @@
+"""Planner benchmark: channel verdicts + buffer slots for the pipeline
+schedules (the runtime lowering comparison lives in tests/test_pipeline
+where a multi-device mesh is available)."""
+from __future__ import annotations
+
+import time
+
+from repro.comm import PipelineSpec, SPHaloSpec, analyze_pipeline, analyze_sp_halo
+
+
+def main(emit) -> None:
+    cases = [
+        ("gpipe_s8_m16", PipelineSpec(8, 16)),
+        ("vpp_s8_m16_c2", PipelineSpec(8, 16, chunks=2, block=2,
+                                       schedule="vpp-blocked")),
+        ("mixed_s8_m8_c4", PipelineSpec(8, 8, chunks=4, schedule="mixed")),
+    ]
+    for name, spec in cases:
+        t0 = time.perf_counter()
+        _, plans = analyze_pipeline(spec)
+        dt = time.perf_counter() - t0
+        cheap = sum(p.is_cheap for p in plans)
+        slots = sum(p.buffer_slots for p in plans)
+        emit(f"pipeline/{name}", dt * 1e6,
+             f"{cheap}/{len(plans)} FIFO streams, {slots} buffer slots")
+    t0 = time.perf_counter()
+    _, plans = analyze_sp_halo(SPHaloSpec(shards=16, blocks_per_shard=8))
+    emit("pipeline/sp_halo_16", (time.perf_counter() - t0) * 1e6,
+         f"{sum(p.is_cheap for p in plans)}/{len(plans)} FIFO, "
+         f"max slots {max(p.buffer_slots for p in plans)}")

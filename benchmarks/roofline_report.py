@@ -1,0 +1,65 @@
+"""Render the §Dry-run / §Roofline tables from the results/dryrun JSON cache
+(produced by `python -m repro.launch.dryrun`)."""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+CACHE = pathlib.Path("results/dryrun")
+
+
+def load(cache: pathlib.Path = CACHE) -> List[Dict]:
+    recs = []
+    for f in sorted(cache.glob("*.json")):
+        try:
+            recs.append(json.loads(f.read_text()))
+        except Exception:
+            pass
+    return recs
+
+
+def fmt_table(recs: List[Dict], mesh: str = "16x16") -> str:
+    hdr = (f"{'arch':22s} {'cell':11s} {'dom':10s} {'comp_s':>9s} {'mem_s':>9s} "
+           f"{'coll_s':>9s} {'HBM GiB':>8s} {'useful':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            lines.append(f"{r['arch']:22s} {r['cell']:11s} SKIP ({r['reason'][:48]}…)")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"{r['arch']:22s} {r['cell']:11s} ERROR "
+                         f"{r.get('error','')[:60]}")
+            continue
+        rf = r["roofline"]
+        uf = rf.get("useful_flops_ratio")
+        lines.append(
+            f"{r['arch']:22s} {r['cell']:11s} {rf['dominant']:10s} "
+            f"{rf['compute_s']:9.2e} {rf['memory_s']:9.2e} "
+            f"{rf['collective_s']:9.2e} "
+            f"{r['memory']['peak_bytes_per_device']/2**30:8.2f} "
+            f"{uf if uf is None else round(uf, 3)!s:>7s}")
+    return "\n".join(lines)
+
+
+def main(emit) -> None:
+    recs = load()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    err = [r for r in recs if r.get("status") == "error"]
+    emit("roofline/cells", 0.0,
+         f"{len(ok)} ok / {len(skipped)} skipped / {len(err)} error")
+    for r in ok:
+        rf = r["roofline"]
+        emit(f"roofline/{r['arch']}/{r['cell']}/{r['mesh']}",
+             max(rf["compute_s"], rf["memory_s"], rf["collective_s"]) * 1e6,
+             f"dom={rf['dominant']} "
+             f"hbm={r['memory']['peak_bytes_per_device']/2**30:.1f}GiB")
+
+
+if __name__ == "__main__":
+    print(fmt_table(load(), "16x16"))
+    print()
+    print(fmt_table(load(), "2x16x16"))

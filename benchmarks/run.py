@@ -1,0 +1,25 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import (fig3_stencil, moe_capacity, pipeline_comm,
+                   roofline_report, table1_storage, table2_fifo)
+
+    def emit(name: str, us: float, derived: str = "") -> None:
+        print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+
+    print("name,us_per_call,derived")
+    table2_fifo.main(emit)      # paper Table 2: FIFO recovery
+    table1_storage.main(emit)   # paper Table 1: storage impact
+    fig3_stencil.main(emit)     # Fig. 3: the FIFO stencil kernel on TPU terms
+    pipeline_comm.main(emit)    # the planner on pipeline/SP schedules
+    moe_capacity.main(emit)     # capacity-factor → drop-rate ablation
+    roofline_report.main(emit)  # §Roofline summary from the dry-run cache
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,41 @@
+"""Paper Table 1 counterpart: storage impact of splitting (Δ column)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core.patterns import Pattern, classify_channel
+from repro.core.polybench import get, kernel_names
+from repro.core.ppn import PPN
+from repro.core.sizing import size_channels
+from repro.core.split import fifoize
+
+
+def run_kernel(name: str) -> Dict:
+    case = get(name)
+    t0 = time.perf_counter()
+    ppn = PPN.from_kernel(case.kernel, tilings=case.tilings)
+    ppn2, rep = fifoize(ppn)
+    # size-fifo-fail: channels that were split (non-FIFO before); compare the
+    # original channel's storage vs the sum of its FIFO pieces (paper Table 1)
+    before_sizes = size_channels(ppn, pow2=True)
+    after_sizes = size_channels(ppn2, pow2=True)
+    split_set = set(rep.split_ok)
+    size_fail = sum(v for k, v in before_sizes.items() if k in split_set)
+    size_split = sum(v for k, v in after_sizes.items()
+                     if any(k.startswith(s + "@") or k == s for s in split_set))
+    delta = (size_split - size_fail) / size_fail if size_fail else 0.0
+    return {"kernel": name, "size_fifo_fail": size_fail,
+            "size_fifo_split": size_split, "delta_pct": round(100 * delta),
+            "seconds": time.perf_counter() - t0}
+
+
+def rows() -> List[Dict]:
+    return [run_kernel(n) for n in kernel_names()]
+
+
+def main(emit) -> None:
+    for r in rows():
+        emit(f"table1/{r['kernel']}", r["seconds"] * 1e6,
+             f"size {r['size_fifo_fail']} -> {r['size_fifo_split']} "
+             f"(delta {r['delta_pct']:+d}%)")

@@ -1,0 +1,13 @@
+"""repro — Improving Communication Patterns in Polyhedral Process Networks,
+as a production JAX training/serving framework.
+
+Layers:
+    repro.core       the paper's algorithm (PPN, classifier, SPLIT/FIFOIZE)
+    repro.comm       communication planner: FIFO→ppermute, else reorder buffer
+    repro.models     the 10 assigned architectures (+ paper's own kernels)
+    repro.configs    selectable configs (--arch <id>)
+    repro.data/optim/train/serve/checkpoint   distributed substrate
+    repro.kernels    Pallas TPU kernels (validated in interpret mode)
+    repro.launch     production mesh, multi-pod dry-run, roofline
+"""
+__version__ = "1.0.0"

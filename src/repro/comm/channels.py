@@ -1,0 +1,33 @@
+"""Runtime channel lowerings, selected by the planner's verdicts.
+
+* `fifo_shift` — the FIFO stream: one `lax.ppermute` hop to the next stage.
+  Cheap: a single neighbor link transfer, double-buffered by XLA.
+* `reorder_buffer_read` — the addressable-buffer fallback for out-of-order
+  channels: every stage's value is all-gathered and the consumer dynamically
+  indexes what it needs.  This is the expensive lowering the paper's
+  algorithm exists to avoid; it is implemented (and benchmarked) as the
+  baseline.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def fifo_shift(x, axis: str, shift: int = 1, wrap: bool = False):
+    """Send x to the next device along `axis` (FIFO neighbor stream)."""
+    n = jax.lax.axis_size(axis)
+    if wrap:
+        perm = [(i, (i + shift) % n) for i in range(n)]
+    else:
+        perm = [(i, i + shift) for i in range(n - shift)]
+    return jax.lax.ppermute(x, axis, perm)
+
+
+def reorder_buffer_read(x, axis: str, index):
+    """Out-of-order channel: publish everyone's value (all_gather), read an
+    arbitrary producer's slot by dynamic index."""
+    buf = jax.lax.all_gather(x, axis)            # (n, …) addressable buffer
+    return jax.lax.dynamic_index_in_dim(buf, index, axis=0, keepdims=False)

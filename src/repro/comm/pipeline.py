@@ -1,0 +1,91 @@
+"""SPMD pipeline parallelism with planner-selected channel lowerings.
+
+GPipe-style schedule over a `pipe` mesh axis inside `jax.shard_map`: stage
+parameters are sharded over the axis; microbatches stream through a rotating
+ppermute ring (the FIFO lowering the planner derives for the inter-stage
+activation channels).  Gradients flow through the transposed ppermute
+automatically under `jax.grad`.
+
+`fifo=False` lowers every channel as the paper's out-of-order fallback
+(all_gather reorder buffer) — the measured baseline for the benchmark
+`benchmarks/pipeline_comm.py`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .channels import fifo_shift, reorder_buffer_read
+
+
+def pipeline_loss_fn(stage_fn: Callable, loss_head: Callable, mesh: Mesh,
+                     axis: str = "pipe", fifo: bool = True):
+    """Build loss(params_stacked, xs, targets) running the stage pipeline.
+
+    stage_fn(stage_params, h) -> h           (one stage's computation)
+    loss_head(h, target_mb) -> scalar        (applied at the last stage)
+    params_stacked: pytree with leading dim = n_stages
+    xs: (M, mb, …) microbatched inputs; targets: (M, …) per microbatch.
+    """
+    n = mesh.shape[axis]
+
+    def inner(params, xs, targets):
+        stage = jax.lax.axis_index(axis)
+        params_local = jax.tree.map(lambda a: a[0], params)
+        M = xs.shape[0]
+        T = M + n - 1                        # pipeline ticks
+        h = jnp.zeros_like(xs[0])
+        loss_acc = jnp.zeros((), jnp.float32)
+
+        def tick(carry, t):
+            h, loss_acc = carry
+            # first stage injects microbatch t (if any left)
+            mb = jax.lax.dynamic_index_in_dim(
+                xs, jnp.minimum(t, M - 1), 0, keepdims=False)
+            h_in = jnp.where(stage == 0, mb, h)
+            h_out = stage_fn(params_local, h_in)
+            # last stage consumes microbatch t-(n-1)
+            out_id = t - (n - 1)
+            tgt = jax.lax.dynamic_index_in_dim(
+                targets, jnp.clip(out_id, 0, M - 1), 0, keepdims=False)
+            mb_loss = loss_head(h_out, tgt)
+            take = jnp.logical_and(stage == n - 1,
+                                   jnp.logical_and(out_id >= 0, out_id < M))
+            loss_acc = loss_acc + jnp.where(take, mb_loss, 0.0)
+            # FIFO channel: stage s → s+1 neighbor stream
+            if fifo:
+                h_next = fifo_shift(h_out, axis, 1, wrap=True)
+            else:
+                # out-of-order fallback: addressable reorder buffer
+                prev = (stage - 1) % n
+                h_next = reorder_buffer_read(h_out, axis, prev)
+            return (h_next, loss_acc), None
+
+        (h, loss_acc), _ = jax.lax.scan(tick, (h, loss_acc), jnp.arange(T))
+        # every stage returns the (replicated) total loss
+        loss = jax.lax.psum(loss_acc, axis) / M
+        return loss
+
+    specs_params = P(axis)
+    return jax.shard_map(inner, mesh=mesh,
+                         in_specs=(P(axis), P(), P()),
+                         out_specs=P(),
+                         check_vma=False)
+
+
+def pipeline_train_step(stage_fn, loss_head, mesh: Mesh, axis: str = "pipe",
+                        fifo: bool = True, lr: float = 1e-2):
+    """SGD step on the pipelined loss (used by examples/tests)."""
+    loss_fn = pipeline_loss_fn(stage_fn, loss_head, mesh, axis, fifo)
+
+    @jax.jit
+    def step(params, xs, targets):
+        loss, grads = jax.value_and_grad(loss_fn)(params, xs, targets)
+        params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return params, loss
+
+    return step

@@ -1,0 +1,34 @@
+"""The paper's contribution: PPN channel classification + FIFO recovery.
+
+Public API:
+    affine / polyhedron / relation  — Presburger-lite machinery
+    dataflow                        — kernel IR + exact direct dependences
+    ppn                             — polyhedral process networks
+    patterns                        — FIFO / in-order / out-of-order classifier
+    split                           — SPLIT + FIFOIZE (paper Fig. 2)
+    sizing                          — channel capacity + pow2 heuristic
+    polybench                       — the paper's 15-kernel benchmark suite
+"""
+from .affine import Constraint, LinExpr, eq, ge, gt, le, lt, v
+from .dataflow import Access, DepEdges, Kernel, Statement, direct_dependences
+from .patterns import (Pattern, ProcSpace, classify_channel, classify_edges,
+                       classify_symbolic, in_order_symbolic, unicity_symbolic)
+from .polyhedron import Polyhedron
+from .ppn import PPN, Channel, Process
+from .relation import Relation
+from .schedule import AffineSchedule
+from .sizing import channel_capacity, pow2_size, size_channels
+from .split import (FifoizeReport, NotApplicable, fifoize, fifoize_relation,
+                    split_channel, split_covers, split_relation)
+from .tiling import Tiling, rectangular
+
+__all__ = [
+    "Access", "AffineSchedule", "Channel", "Constraint", "DepEdges",
+    "FifoizeReport", "Kernel", "LinExpr", "NotApplicable", "PPN", "Pattern",
+    "Polyhedron", "ProcSpace", "Process", "Relation", "Statement", "Tiling",
+    "channel_capacity", "classify_channel", "classify_edges",
+    "classify_symbolic", "direct_dependences", "eq", "fifoize",
+    "fifoize_relation", "ge", "gt", "in_order_symbolic", "le", "lt",
+    "pow2_size", "rectangular", "size_channels", "split_channel",
+    "split_covers", "split_relation", "unicity_symbolic", "v",
+]

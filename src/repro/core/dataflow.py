@@ -1,0 +1,187 @@
+"""Kernel IR and exact direct-dependence (dataflow) analysis.
+
+The paper consumes *direct dependences* — each read instance is related to the
+instance that produced the value it reads (Feautrier's array dataflow
+analysis).  We implement an exact enumerative engine: for fixed structure
+parameters, execute the polyhedral program abstractly in schedule order and
+record, for every read, the last write to the same cell.  This is the
+semantics-defining oracle (the paper's tool computes the same relation
+symbolically with ISL/PIP; for the uniform-dependence channels that dominate
+the benchmarks we also build the symbolic `Relation` directly).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .affine import Constraint, LinExpr
+from .polyhedron import Polyhedron
+from .schedule import AffineSchedule
+
+NEG_INF = -(10 ** 9)
+
+
+@dataclass(frozen=True)
+class Access:
+    array: str
+    fn: Tuple[LinExpr, ...]     # index expressions over stmt dims (+ params)
+
+
+@dataclass
+class Statement:
+    name: str
+    dims: Tuple[str, ...]
+    domain: List[Constraint]          # over dims + params
+    schedule: AffineSchedule          # 2d+1-style global timestamp
+    writes: List[Access] = field(default_factory=list)
+    reads: List[Access] = field(default_factory=list)
+
+
+@dataclass
+class Kernel:
+    name: str
+    params: Dict[str, int]            # default concrete sizes
+    statements: List[Statement]
+    arrays: Dict[str, Tuple[int, ...]] = field(default_factory=dict)
+
+    def statement(self, name: str) -> Statement:
+        for s in self.statements:
+            if s.name == name:
+                return s
+        raise KeyError(name)
+
+
+# ---------------------------------------------------------------- evaluation
+
+def _expr_matrix(exprs: Sequence[LinExpr], dims: Sequence[str],
+                 params: Mapping[str, int]) -> Tuple[np.ndarray, np.ndarray]:
+    """Return (M, c) with  value = pts @ M.T + c  for integer points."""
+    m = np.zeros((len(exprs), len(dims)), dtype=np.int64)
+    c = np.zeros(len(exprs), dtype=np.int64)
+    for r, e in enumerate(exprs):
+        c[r] = e.const
+        for vname, coeff in e.coeffs.items():
+            if vname in params:
+                c[r] += coeff * params[vname]
+            else:
+                m[r, dims.index(vname)] = coeff
+    return m, c
+
+
+def enumerate_domain(stmt: Statement, params: Mapping[str, int]) -> np.ndarray:
+    """Integer points of the statement domain as an (N × d) array."""
+    poly = Polyhedron(c.substitute({p: LinExpr.const_expr(v)
+                                    for p, v in params.items()})
+                      for c in stmt.domain)
+    if not stmt.dims:
+        return np.zeros((1, 0), dtype=np.int64)
+    box = poly.bounding_box()
+    for d in stmt.dims:
+        if d not in box:
+            raise ValueError(f"{stmt.name}: dim {d} unbounded")
+    grids = np.meshgrid(*[np.arange(box[d][0], box[d][1] + 1) for d in stmt.dims],
+                        indexing="ij")
+    pts = np.stack([g.ravel() for g in grids], axis=1).astype(np.int64)
+    if pts.size == 0:
+        return pts.reshape(0, len(stmt.dims))
+    m, c = _expr_matrix([r for r in poly.rows], stmt.dims, {})
+    vals = pts @ m.T + c
+    return pts[(vals >= 0).all(axis=1)]
+
+
+def eval_exprs(exprs: Sequence[LinExpr], dims: Sequence[str],
+               pts: np.ndarray, params: Mapping[str, int]) -> np.ndarray:
+    m, c = _expr_matrix(exprs, list(dims), params)
+    return pts @ m.T + c
+
+
+# ------------------------------------------------------------------ dataflow
+
+@dataclass
+class DepEdges:
+    """All direct dependences for one (producer stmt, consumer stmt, read ref).
+
+    src_pts[k] (producer iteration) produced the value read by dst_pts[k]
+    (consumer iteration).  This is the paper's dataflow relation →c of the
+    canonical channel partition: one channel per producer/read-reference pair.
+    """
+
+    producer: str
+    consumer: str
+    ref: int                     # read-reference index within the consumer
+    array: str
+    src_pts: np.ndarray          # (E × d_P)
+    dst_pts: np.ndarray          # (E × d_C)
+
+    @property
+    def num_edges(self) -> int:
+        return self.src_pts.shape[0]
+
+
+def direct_dependences(kernel: Kernel, params: Optional[Mapping[str, int]] = None
+                       ) -> List[DepEdges]:
+    """Exact direct dependences by abstract execution in schedule order."""
+    params = dict(kernel.params, **(params or {}))
+
+    # Enumerate all instances + global timestamps (padded to equal length).
+    all_pts: List[np.ndarray] = []
+    all_ts: List[np.ndarray] = []
+    stmt_of: List[int] = []
+    max_len = max(len(s.schedule) for s in kernel.statements)
+    for si, s in enumerate(kernel.statements):
+        pts = enumerate_domain(s, params)
+        ts = eval_exprs(s.schedule.exprs, s.dims, pts, params)
+        if ts.shape[1] < max_len:
+            pad = np.full((ts.shape[0], max_len - ts.shape[1]), NEG_INF,
+                          dtype=np.int64)
+            ts = np.concatenate([ts, pad], axis=1)
+        all_pts.append(pts)
+        all_ts.append(ts)
+        stmt_of.extend([si] * len(pts))
+
+    ts_cat = np.concatenate(all_ts, axis=0)
+    order = np.lexsort(ts_cat.T[::-1])
+    stmt_of_arr = np.array(stmt_of)
+    local_idx = np.concatenate([np.arange(len(p)) for p in all_pts])
+
+    # Precompute index values for each access of each statement.
+    acc_vals: Dict[Tuple[int, str, int], np.ndarray] = {}
+    for si, s in enumerate(kernel.statements):
+        for ri, acc in enumerate(s.reads):
+            acc_vals[(si, "r", ri)] = eval_exprs(acc.fn, s.dims, all_pts[si], params)
+        for wi, acc in enumerate(s.writes):
+            acc_vals[(si, "w", wi)] = eval_exprs(acc.fn, s.dims, all_pts[si], params)
+
+    last_writer: Dict[Tuple[str, Tuple[int, ...]], Tuple[int, int]] = {}
+    edges: Dict[Tuple[int, int, int], Tuple[List[int], List[int], str]] = {}
+
+    for gi in order:
+        si = int(stmt_of_arr[gi])
+        li = int(local_idx[gi])
+        s = kernel.statements[si]
+        # reads first (a statement reads its operands, then writes its result)
+        for ri, acc in enumerate(s.reads):
+            cell = (acc.array, tuple(int(x) for x in acc_vals[(si, "r", ri)][li]))
+            w = last_writer.get(cell)
+            if w is None:
+                continue                         # external input, no producer
+            key = (w[0], si, ri)
+            bucket = edges.setdefault(key, ([], [], acc.array))
+            bucket[0].append(w[1])
+            bucket[1].append(li)
+        for wi, acc in enumerate(s.writes):
+            cell = (acc.array, tuple(int(x) for x in acc_vals[(si, "w", wi)][li]))
+            last_writer[cell] = (si, li)
+
+    out: List[DepEdges] = []
+    for (pi, ci, ri), (srcs, dsts, arr) in sorted(edges.items()):
+        out.append(DepEdges(
+            producer=kernel.statements[pi].name,
+            consumer=kernel.statements[ci].name,
+            ref=ri, array=arr,
+            src_pts=all_pts[pi][np.array(srcs)],
+            dst_pts=all_pts[ci][np.array(dsts)],
+        ))
+    return out

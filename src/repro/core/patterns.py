@@ -1,0 +1,156 @@
+"""Communication-pattern classification (paper §2.3).
+
+    in-order(→c, ≺P, ≺C) := ∀ x→c x', ∀ y→c y' : x' ≺C y' ⇒ x ⪯P y
+    unicity(→c)          := ∀ x→c x', ∀ y→c y' : x' ≠ y' ⇒ x ≠ y
+    fifo                 := in-order ∧ unicity
+
+Two backends:
+
+* **enumeration** (exact for fixed structure parameters): sort the edge list
+  by the consumer's local order and check the producer sequence — O(E log E);
+* **symbolic** (compile-time): build the violation sets as unions of integer
+  polyhedra and check emptiness (Fourier–Motzkin + integer point search), as
+  the paper does with an LP/ILP solver.
+
+Both are cross-validated against each other in the test-suite.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from enum import Enum
+from typing import Iterable, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .affine import Constraint, LinExpr, eq
+from .polyhedron import Polyhedron
+from .relation import Relation
+from .schedule import AffineSchedule, lex_lt_at_depth
+from .tiling import Tiling
+from .ppn import Channel, PPN, Process
+
+
+class Pattern(Enum):
+    FIFO = "fifo"                               # in-order ∧ unicity
+    IN_ORDER_MULT = "in-order+mult"             # in-order ∧ ¬unicity
+    OOO_UNICITY = "out-of-order+unicity"        # ¬in-order ∧ unicity
+    OOO = "out-of-order"                        # ¬in-order ∧ ¬unicity
+
+    @staticmethod
+    def of(in_order: bool, unicity: bool) -> "Pattern":
+        if in_order:
+            return Pattern.FIFO if unicity else Pattern.IN_ORDER_MULT
+        return Pattern.OOO_UNICITY if unicity else Pattern.OOO
+
+
+# ===================================================================== ranks
+
+def _lex_rank(ts: np.ndarray) -> np.ndarray:
+    """Rank of each row in lexicographic order — equal rows get EQUAL rank
+    (x ⪯ y must treat identical timestamps as equal, and unicity compares
+    source *values*)."""
+    if ts.shape[0] == 0:
+        return np.zeros(0, dtype=np.int64)
+    _, inv = np.unique(ts, axis=0, return_inverse=True)
+    return inv.astype(np.int64)
+
+
+# ========================================================== enumeration side
+
+def classify_edges(src_ts: np.ndarray, dst_ts: np.ndarray) -> Tuple[bool, bool]:
+    """(in_order, unicity) for an edge list with *local* timestamps."""
+    n = src_ts.shape[0]
+    if n == 0:
+        return True, True
+    src_rank = _lex_rank(src_ts)
+    dst_rank = _lex_rank(dst_ts)
+    order = np.argsort(dst_rank, kind="stable")
+    prod_seq = src_rank[order]
+    in_order = bool(np.all(np.diff(prod_seq) >= 0))
+    # unicity: each produced value read exactly once ⇔ no duplicated source
+    unicity = len(np.unique(src_ts, axis=0)) == n
+    return in_order, unicity
+
+
+def classify_channel(ppn: PPN, c: Channel) -> Pattern:
+    prod = ppn.processes[c.producer]
+    cons = ppn.processes[c.consumer]
+    src_ts = prod.local_ts(c.src_pts, ppn.params)
+    dst_ts = cons.local_ts(c.dst_pts, ppn.params)
+    in_order, unicity = classify_edges(src_ts, dst_ts)
+    return Pattern.of(in_order, unicity)
+
+
+# ============================================================= symbolic side
+
+@dataclass
+class ProcSpace:
+    """A process's iteration space with its (possibly tiled) local schedule,
+    for symbolic reasoning."""
+
+    dims: Tuple[str, ...]
+    base: AffineSchedule
+    tiling: Optional[Tiling] = None
+
+    def timestamps(self, var_map: Mapping[str, str], uid: str
+                   ) -> Tuple[List[LinExpr], List[Constraint]]:
+        """Timestamp expressions after renaming dims via ``var_map``; tiled
+        schedules introduce fresh φ variables (prefixed by ``uid``) with their
+        definitional constraints."""
+        renamed = [e.rename(dict(var_map)) for e in self.base.exprs]
+        if self.tiling is None:
+            return renamed, []
+        new_dims = [var_map.get(d, d) for d in self.dims]
+        phis, cons = self.tiling.tile_coord_exprs(new_dims, uid)
+        return phis + renamed, cons
+
+
+def _violation_pieces(rel: Relation, prod: ProcSpace, cons_: ProcSpace,
+                      assumptions: Iterable[Constraint],
+                      kind: str) -> List[Polyhedron]:
+    """Polyhedra whose joint emptiness certifies the property.
+
+    kind='in-order':  x' ≺C y'  ∧  y ≺P x     (violation of x ⪯P y)
+    kind='unicity' :  x' ≺C y'  ∧  x = y      (same value, two reads)
+    """
+    assumptions = list(assumptions)
+    p1, a_vars, b_vars = rel.renamed_pieces("a_", "b_")   # x → x'
+    p2, c_vars, d_vars = rel.renamed_pieces("c_", "d_")   # y → y'
+    ts_b, aux_b = cons_.timestamps(dict(zip(cons_.dims, b_vars)), "tb_")
+    ts_d, aux_d = cons_.timestamps(dict(zip(cons_.dims, d_vars)), "td_")
+    ts_a, aux_a = prod.timestamps(dict(zip(prod.dims, a_vars)), "ta_")
+    ts_c, aux_c = prod.timestamps(dict(zip(prod.dims, c_vars)), "tc_")
+    aux = aux_a + aux_b + aux_c + aux_d
+
+    out: List[Polyhedron] = []
+    for poly1 in p1:
+        for poly2 in p2:
+            base = poly1.intersect(poly2).intersect(assumptions).intersect(aux)
+            for k1 in range(1, len(ts_b) + 1):
+                lhs = base.intersect(lex_lt_at_depth(ts_b, ts_d, k1))
+                if kind == "in-order":
+                    for k2 in range(1, len(ts_a) + 1):
+                        out.append(lhs.intersect(lex_lt_at_depth(ts_c, ts_a, k2)))
+                else:   # unicity violation: identical producer instance
+                    out.append(lhs.intersect(
+                        [eq(LinExpr.var(u), LinExpr.var(w))
+                         for u, w in zip(a_vars, c_vars)]))
+    return out
+
+
+def in_order_symbolic(rel: Relation, prod: ProcSpace, cons_: ProcSpace,
+                      assumptions: Iterable[Constraint] = ()) -> bool:
+    return all(p.is_empty()
+               for p in _violation_pieces(rel, prod, cons_, assumptions, "in-order"))
+
+
+def unicity_symbolic(rel: Relation, prod: ProcSpace, cons_: ProcSpace,
+                     assumptions: Iterable[Constraint] = ()) -> bool:
+    return all(p.is_empty()
+               for p in _violation_pieces(rel, prod, cons_, assumptions, "unicity"))
+
+
+def classify_symbolic(rel: Relation, prod: ProcSpace, cons_: ProcSpace,
+                      assumptions: Iterable[Constraint] = ()) -> Pattern:
+    return Pattern.of(in_order_symbolic(rel, prod, cons_, assumptions),
+                      unicity_symbolic(rel, prod, cons_, assumptions))

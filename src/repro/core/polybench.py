@@ -1,0 +1,496 @@
+"""PolyBench/C 3.2 kernels as polyhedral specs (paper §4 experimental setup).
+
+Each kernel is expressed as statements with iteration domains, a 2d+1 global
+schedule, and affine array accesses, plus the loop tiling used for the
+experiment (rectangular for linear algebra, skewed for stencils, exactly as
+valid tilings for each kernel's dependences).  Statements living in a sub-band
+of the tiled nest embed into the common tile space with degenerate normals
+(constant tile coordinates) so FIFOIZE can compare tile depths across
+producer/consumer.
+
+Structure parameters are concrete (the enumeration backend is exact for fixed
+sizes, like the paper's tool which sizes channels for fixed PolyBench sizes);
+`PARAM_SCALE` lets tests re-run everything at other sizes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .affine import Constraint, LinExpr, ge, le, lt, v
+from .dataflow import Access, Kernel, Statement
+from .schedule import AffineSchedule
+from .tiling import Tiling
+
+BIG = 10 ** 6
+
+
+def E(x) -> LinExpr:
+    return LinExpr.coerce(x)
+
+
+def sched(dims: Sequence[str], *exprs) -> AffineSchedule:
+    return AffineSchedule(tuple(dims), [E(e) for e in exprs])
+
+
+def rd(arr: str, *idx) -> Access:
+    return Access(arr, tuple(E(i) for i in idx))
+
+
+wr = rd
+
+
+def rng(d: str, lo, hi_excl) -> List[Constraint]:
+    return [ge(v(d), E(lo)), lt(v(d), E(hi_excl))]
+
+
+def load(arr: str, rank: int, *extents) -> Statement:
+    """Input process: writes every cell of ``arr`` before the computation."""
+    dims = tuple(f"l{k}" for k in range(len(extents)))
+    dom: List[Constraint] = []
+    for d, ext in zip(dims, extents):
+        dom += rng(d, 0, ext)
+    return Statement(f"load_{arr}", dims, dom,
+                     sched(dims, -1, rank, *[v(d) for d in dims]),
+                     writes=[wr(arr, *[v(d) for d in dims])])
+
+
+def store(arr: str, rank: int, *extents) -> Statement:
+    dims = tuple(f"s{k}" for k in range(len(extents)))
+    dom: List[Constraint] = []
+    for d, ext in zip(dims, extents):
+        dom += rng(d, 0, ext)
+    return Statement(f"store_{arr}", dims, dom,
+                     sched(dims, BIG, rank, *[v(d) for d in dims]),
+                     reads=[rd(arr, *[v(d) for d in dims])])
+
+
+@dataclass
+class KernelCase:
+    kernel: Kernel
+    tilings: Dict[str, Tiling]
+    compute: Tuple[str, ...]          # compute-process names (paper's tables
+                                      # count channels between these)
+    notes: str = ""
+
+
+_REGISTRY: Dict[str, Callable[[int], KernelCase]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def kernel_names() -> List[str]:
+    return list(_REGISTRY)
+
+
+def get(name: str, scale: int = 1) -> KernelCase:
+    return _REGISTRY[name](scale)
+
+
+def _rect(dims: Sequence[str], tiled: Sequence[str], b: int) -> Tiling:
+    """Tiling of `dims` with one hyperplane per name in `tiled`; names not in
+    `dims` become degenerate (constant-0) coordinates."""
+    normals = []
+    for t in tiled:
+        normals.append(tuple(1 if d == t else 0 for d in dims))
+    return Tiling(tuple(normals), tuple(b for _ in tiled))
+
+
+# =========================================================== linear algebra
+
+@register("gemm")
+def gemm(scale: int = 1) -> KernelCase:
+    N, b = 12 * scale, 4
+    init = Statement("init", ("i", "j"), rng("i", 0, N) + rng("j", 0, N),
+                     sched(("i", "j"), 0, v("i"), v("j"), 0, 0),
+                     writes=[wr("C", v("i"), v("j"))],
+                     reads=[rd("C", v("i"), v("j"))])
+    upd = Statement("upd", ("i", "j", "k"),
+                    rng("i", 0, N) + rng("j", 0, N) + rng("k", 0, N),
+                    sched(("i", "j", "k"), 0, v("i"), v("j"), 1, v("k")),
+                    writes=[wr("C", v("i"), v("j"))],
+                    reads=[rd("C", v("i"), v("j")), rd("A", v("i"), v("k")),
+                           rd("B", v("k"), v("j"))])
+    k = Kernel("gemm", {}, [load("C", 0, N, N), load("A", 1, N, N),
+                            load("B", 2, N, N), init, upd, store("C", 0, N, N)])
+    til = {"init": _rect(("i", "j"), ("i", "j", "k"), b),
+           "upd": _rect(("i", "j", "k"), ("i", "j", "k"), b)}
+    return KernelCase(k, til, ("init", "upd"))
+
+
+@register("trmm")
+def trmm(scale: int = 1) -> KernelCase:
+    N, b = 12 * scale, 4
+    s = Statement("upd", ("i", "j", "k"),
+                  rng("i", 1, N) + rng("j", 0, N) + [ge(v("k"), 0), lt(v("k"), v("i"))],
+                  sched(("i", "j", "k"), 0, v("i"), v("j"), v("k")),
+                  writes=[wr("B", v("i"), v("j"))],
+                  reads=[rd("B", v("i"), v("j")), rd("A", v("i"), v("k")),
+                         rd("B", v("k"), v("j"))])
+    k = Kernel("trmm", {}, [load("A", 0, N, N), load("B", 1, N, N), s,
+                            store("B", 0, N, N)])
+    return KernelCase(k, {"upd": _rect(("i", "j", "k"), ("i", "j", "k"), b)},
+                      ("upd",))
+
+
+@register("syrk")
+def syrk(scale: int = 1) -> KernelCase:
+    N, b = 12 * scale, 4
+    init = Statement("init", ("i", "j"), rng("i", 0, N) + rng("j", 0, N),
+                     sched(("i", "j"), 0, v("i"), v("j"), 0, 0),
+                     writes=[wr("C", v("i"), v("j"))],
+                     reads=[rd("C", v("i"), v("j"))])
+    upd = Statement("upd", ("i", "j", "k"),
+                    rng("i", 0, N) + rng("j", 0, N) + rng("k", 0, N),
+                    sched(("i", "j", "k"), 0, v("i"), v("j"), 1, v("k")),
+                    writes=[wr("C", v("i"), v("j"))],
+                    reads=[rd("C", v("i"), v("j")), rd("A", v("i"), v("k")),
+                           rd("A", v("j"), v("k"))])
+    k = Kernel("syrk", {}, [load("C", 0, N, N), load("A", 1, N, N), init, upd,
+                            store("C", 0, N, N)])
+    til = {"init": _rect(("i", "j"), ("i", "j", "k"), b),
+           "upd": _rect(("i", "j", "k"), ("i", "j", "k"), b)}
+    return KernelCase(k, til, ("init", "upd"))
+
+
+@register("syr2k")
+def syr2k(scale: int = 1) -> KernelCase:
+    case = syrk(scale)
+    N = 12 * scale
+    upd = case.kernel.statement("upd")
+    upd.reads = [rd("C", v("i"), v("j")), rd("A", v("i"), v("k")),
+                 rd("B", v("j"), v("k")), rd("B", v("i"), v("k")),
+                 rd("A", v("j"), v("k"))]
+    stmts = [s for s in case.kernel.statements if not s.name.startswith(("load_B",))]
+    stmts.insert(2, load("B", 2, N, N))
+    k = Kernel("syr2k", {}, stmts)
+    return KernelCase(k, case.tilings, ("init", "upd"))
+
+
+@register("symm")
+def symm(scale: int = 1) -> KernelCase:
+    N, b = 12 * scale, 4
+    ij = rng("i", 0, N) + rng("j", 0, N)
+    ijk = ij + [ge(v("k"), 0), lt(v("k"), v("i"))]
+    s0 = Statement("accinit", ("i", "j"), ij,
+                   sched(("i", "j"), 0, v("i"), v("j"), 0, 0, 0),
+                   writes=[wr("acc", v("i"), v("j"))])
+    s1 = Statement("cupd", ("i", "j", "k"), ijk,
+                   sched(("i", "j", "k"), 0, v("i"), v("j"), 1, v("k"), 0),
+                   writes=[wr("C", v("k"), v("j"))],
+                   reads=[rd("C", v("k"), v("j")), rd("A", v("k"), v("i")),
+                          rd("B", v("i"), v("j"))])
+    s2 = Statement("accupd", ("i", "j", "k"), ijk,
+                   sched(("i", "j", "k"), 0, v("i"), v("j"), 1, v("k"), 1),
+                   writes=[wr("acc", v("i"), v("j"))],
+                   reads=[rd("acc", v("i"), v("j")), rd("B", v("k"), v("j")),
+                          rd("A", v("k"), v("i"))])
+    s3 = Statement("cfin", ("i", "j"), ij,
+                   sched(("i", "j"), 0, v("i"), v("j"), 2, 0, 0),
+                   writes=[wr("C", v("i"), v("j"))],
+                   reads=[rd("C", v("i"), v("j")), rd("A", v("i"), v("i")),
+                          rd("B", v("i"), v("j")), rd("acc", v("i"), v("j"))])
+    k = Kernel("symm", {}, [load("C", 0, N, N), load("A", 1, N, N),
+                            load("B", 2, N, N), s0, s1, s2, s3,
+                            store("C", 0, N, N)])
+    til = {"accinit": _rect(("i", "j"), ("i", "j", "k"), b),
+           "cupd": _rect(("i", "j", "k"), ("i", "j", "k"), b),
+           "accupd": _rect(("i", "j", "k"), ("i", "j", "k"), b),
+           "cfin": _rect(("i", "j"), ("i", "j", "k"), b)}
+    return KernelCase(k, til, ("accinit", "cupd", "accupd", "cfin"))
+
+
+@register("gemver")
+def gemver(scale: int = 1) -> KernelCase:
+    N, b = 12 * scale, 4
+    ij = rng("i", 0, N) + rng("j", 0, N)
+    s1 = Statement("ahat", ("i", "j"), ij,
+                   sched(("i", "j"), 0, v("i"), v("j")),
+                   writes=[wr("A", v("i"), v("j"))],
+                   reads=[rd("A", v("i"), v("j")), rd("u1", v("i")), rd("v1", v("j")),
+                          rd("u2", v("i")), rd("v2", v("j"))])
+    s2 = Statement("xupd", ("i", "j"), ij,
+                   sched(("i", "j"), 1, v("i"), v("j")),
+                   writes=[wr("x", v("i"))],
+                   reads=[rd("x", v("i")), rd("A", v("j"), v("i")), rd("y", v("j"))])
+    s3 = Statement("xz", ("i",), rng("i", 0, N),
+                   sched(("i",), 2, v("i"), 0),
+                   writes=[wr("x", v("i"))],
+                   reads=[rd("x", v("i")), rd("z", v("i"))])
+    s4 = Statement("wupd", ("i", "j"), ij,
+                   sched(("i", "j"), 3, v("i"), v("j")),
+                   writes=[wr("w", v("i"))],
+                   reads=[rd("w", v("i")), rd("A", v("i"), v("j")), rd("x", v("j"))])
+    k = Kernel("gemver", {}, [
+        load("A", 0, N, N), load("u1", 1, N), load("v1", 2, N),
+        load("u2", 3, N), load("v2", 4, N), load("x", 5, N), load("y", 6, N),
+        load("z", 7, N), load("w", 8, N),
+        s1, s2, s3, s4, store("x", 0, N), store("w", 1, N)])
+    til = {"ahat": _rect(("i", "j"), ("i", "j"), b),
+           "xupd": _rect(("i", "j"), ("i", "j"), b),
+           "xz": _rect(("i",), ("i", "j"), b),
+           "wupd": _rect(("i", "j"), ("i", "j"), b)}
+    return KernelCase(k, til, ("ahat", "xupd", "xz", "wupd"))
+
+
+@register("gesummv")
+def gesummv(scale: int = 1) -> KernelCase:
+    N, b = 12 * scale, 4
+    ij = rng("i", 0, N) + rng("j", 0, N)
+    s0 = Statement("tinit", ("i",), rng("i", 0, N),
+                   sched(("i",), 0, v("i"), 0, 0, 0),
+                   writes=[wr("tmp", v("i"))])
+    s1 = Statement("yinit", ("i",), rng("i", 0, N),
+                   sched(("i",), 0, v("i"), 1, 0, 0),
+                   writes=[wr("y", v("i"))])
+    s2 = Statement("tupd", ("i", "j"), ij,
+                   sched(("i", "j"), 0, v("i"), 2, v("j"), 0),
+                   writes=[wr("tmp", v("i"))],
+                   reads=[rd("tmp", v("i")), rd("A", v("i"), v("j")), rd("x", v("j"))])
+    s3 = Statement("yupd", ("i", "j"), ij,
+                   sched(("i", "j"), 0, v("i"), 2, v("j"), 1),
+                   writes=[wr("y", v("i"))],
+                   reads=[rd("y", v("i")), rd("B", v("i"), v("j")), rd("x", v("j"))])
+    s4 = Statement("yfin", ("i",), rng("i", 0, N),
+                   sched(("i",), 0, v("i"), 3, 0, 0),
+                   writes=[wr("y", v("i"))],
+                   reads=[rd("tmp", v("i")), rd("y", v("i"))])
+    k = Kernel("gesummv", {}, [load("A", 0, N, N), load("B", 1, N, N),
+                               load("x", 2, N), s0, s1, s2, s3, s4,
+                               store("y", 0, N)])
+    til = {"tinit": _rect(("i",), ("i", "j"), b),
+           "yinit": _rect(("i",), ("i", "j"), b),
+           "tupd": _rect(("i", "j"), ("i", "j"), b),
+           "yupd": _rect(("i", "j"), ("i", "j"), b),
+           "yfin": _rect(("i",), ("i", "j"), b)}
+    return KernelCase(k, til, ("tinit", "yinit", "tupd", "yupd", "yfin"))
+
+
+@register("lu")
+def lu(scale: int = 1) -> KernelCase:
+    N, b = 12 * scale, 4
+    s1 = Statement("div", ("k", "j"),
+                   rng("k", 0, N) + [ge(v("j"), v("k") + 1), lt(v("j"), E(N))],
+                   sched(("k", "j"), 0, v("k"), 0, v("j"), 0),
+                   writes=[wr("A", v("k"), v("j"))],
+                   reads=[rd("A", v("k"), v("j")), rd("A", v("k"), v("k"))])
+    s2 = Statement("upd", ("k", "i", "j"),
+                   rng("k", 0, N) + [ge(v("i"), v("k") + 1), lt(v("i"), E(N)),
+                                     ge(v("j"), v("k") + 1), lt(v("j"), E(N))],
+                   sched(("k", "i", "j"), 0, v("k"), 1, v("i"), v("j")),
+                   writes=[wr("A", v("i"), v("j"))],
+                   reads=[rd("A", v("i"), v("j")), rd("A", v("i"), v("k")),
+                          rd("A", v("k"), v("j"))])
+    k = Kernel("lu", {}, [load("A", 0, N, N), s1, s2, store("A", 0, N, N)])
+    til = {"div": Tiling(((1, 0), (0, 1)), (b, b)),
+           "upd": Tiling(((1, 0, 0), (0, 0, 1)), (b, b))}
+    return KernelCase(k, til, ("div", "upd"))
+
+
+@register("cholesky")
+def cholesky(scale: int = 1) -> KernelCase:
+    N, b = 12 * scale, 4
+    s0 = Statement("xinit", ("i",), rng("i", 0, N),
+                   sched(("i",), 0, v("i"), 0, 0, 0, 0),
+                   writes=[wr("x", v("i"))], reads=[rd("A", v("i"), v("i"))])
+    s1 = Statement("xupd", ("i", "j"),
+                   rng("i", 0, N) + [ge(v("j"), 0), lt(v("j"), v("i"))],
+                   sched(("i", "j"), 0, v("i"), 1, v("j"), 0, 0),
+                   writes=[wr("x", v("i"))],
+                   reads=[rd("x", v("i")), rd("L", v("i"), v("j"))])
+    s2 = Statement("pset", ("i",), rng("i", 0, N),
+                   sched(("i",), 0, v("i"), 2, 0, 0, 0),
+                   writes=[wr("p", v("i"))], reads=[rd("x", v("i"))])
+    s3 = Statement("yinit", ("i", "j"),
+                   rng("i", 0, N) + [ge(v("j"), v("i") + 1), lt(v("j"), E(N))],
+                   sched(("i", "j"), 0, v("i"), 3, v("j"), 0, 0),
+                   writes=[wr("y", v("i"), v("j"))], reads=[rd("A", v("i"), v("j"))])
+    s4 = Statement("yupd", ("i", "j", "k"),
+                   rng("i", 0, N) + [ge(v("j"), v("i") + 1), lt(v("j"), E(N)),
+                                     ge(v("k"), 0), lt(v("k"), v("i"))],
+                   sched(("i", "j", "k"), 0, v("i"), 3, v("j"), 1, v("k")),
+                   writes=[wr("y", v("i"), v("j"))],
+                   reads=[rd("y", v("i"), v("j")), rd("L", v("j"), v("k")),
+                          rd("L", v("i"), v("k"))])
+    s5 = Statement("lset", ("i", "j"),
+                   rng("i", 0, N) + [ge(v("j"), v("i") + 1), lt(v("j"), E(N))],
+                   sched(("i", "j"), 0, v("i"), 3, v("j"), 2, 0),
+                   writes=[wr("L", v("j"), v("i"))],
+                   reads=[rd("y", v("i"), v("j")), rd("p", v("i"))])
+    k = Kernel("cholesky", {}, [load("A", 0, N, N), s0, s1, s2, s3, s4, s5,
+                                store("L", 0, N, N), store("p", 1, N)])
+    til = {"xinit": Tiling(((1,), (0,)), (b, b)),
+           "xupd": Tiling(((1, 0), (0, 1)), (b, b)),
+           "pset": Tiling(((1,), (0,)), (b, b)),
+           "yinit": Tiling(((1, 0), (0, 1)), (b, b)),
+           "yupd": Tiling(((1, 0, 0), (0, 1, 0)), (b, b)),
+           "lset": Tiling(((1, 0), (0, 1)), (b, b))}
+    return KernelCase(k, til, ("xinit", "xupd", "pset", "yinit", "yupd", "lset"))
+
+
+@register("atax")
+def atax(scale: int = 1) -> KernelCase:
+    N, b = 12 * scale, 4
+    ij = rng("i", 0, N) + rng("j", 0, N)
+    s0 = Statement("yinit", ("j",), rng("j", 0, N),
+                   sched(("j",), 0, v("j"), 0, 0),
+                   writes=[wr("y", v("j"))])
+    s1 = Statement("tinit", ("i",), rng("i", 0, N),
+                   sched(("i",), 1, v("i"), 0, 0),
+                   writes=[wr("tmp", v("i"))])
+    s2 = Statement("tupd", ("i", "j"), ij,
+                   sched(("i", "j"), 1, v("i"), 1, v("j")),
+                   writes=[wr("tmp", v("i"))],
+                   reads=[rd("tmp", v("i")), rd("A", v("i"), v("j")), rd("x", v("j"))])
+    s3 = Statement("yupd", ("i", "j"), ij,
+                   sched(("i", "j"), 1, v("i"), 2, v("j")),
+                   writes=[wr("y", v("j"))],
+                   reads=[rd("y", v("j")), rd("tmp", v("i")), rd("A", v("i"), v("j"))])
+    k = Kernel("atax", {}, [load("A", 0, N, N), load("x", 1, N),
+                            s0, s1, s2, s3, store("y", 0, N)])
+    til = {"yinit": Tiling(((1,), (0,)), (b, b)),
+           "tinit": Tiling(((1,), (0,)), (b, b)),
+           "tupd": _rect(("i", "j"), ("i", "j"), b),
+           "yupd": _rect(("i", "j"), ("i", "j"), b)}
+    return KernelCase(k, til, ("yinit", "tinit", "tupd", "yupd"))
+
+
+@register("doitgen")
+def doitgen(scale: int = 1) -> KernelCase:
+    N, b = 8 * scale, 4
+    rqp = rng("r", 0, N) + rng("q", 0, N) + rng("p", 0, N)
+    rqps = rqp + rng("s", 0, N)
+    s0 = Statement("sinit", ("r", "q", "p"), rqp,
+                   sched(("r", "q", "p"), 0, v("r"), v("q"), 0, v("p"), 0, 0),
+                   writes=[wr("sum", v("r"), v("q"), v("p"))])
+    s1 = Statement("supd", ("r", "q", "p", "s"), rqps,
+                   sched(("r", "q", "p", "s"), 0, v("r"), v("q"), 0, v("p"), 1, v("s")),
+                   writes=[wr("sum", v("r"), v("q"), v("p"))],
+                   reads=[rd("sum", v("r"), v("q"), v("p")),
+                          rd("A", v("r"), v("q"), v("s")),
+                          rd("C4", v("s"), v("p"))])
+    s2 = Statement("aset", ("r", "q", "p"), rqp,
+                   sched(("r", "q", "p"), 0, v("r"), v("q"), 1, v("p"), 0, 0),
+                   writes=[wr("A", v("r"), v("q"), v("p"))],
+                   reads=[rd("sum", v("r"), v("q"), v("p"))])
+    k = Kernel("doitgen", {}, [load("A", 0, N, N, N), load("C4", 1, N, N),
+                               s0, s1, s2, store("A", 0, N, N, N)])
+    til = {"sinit": _rect(("r", "q", "p"), ("r", "q", "p", "s"), b),
+           "supd": _rect(("r", "q", "p", "s"), ("r", "q", "p", "s"), b),
+           "aset": _rect(("r", "q", "p"), ("r", "q", "p", "s"), b)}
+    return KernelCase(k, til, ("sinit", "supd", "aset"))
+
+
+# ================================================================== stencils
+
+@register("jacobi-1d")
+def jacobi_1d(scale: int = 1) -> KernelCase:
+    N, T, b = 16 * scale, 8 * scale, 4
+    ti = rng("t", 0, T) + rng("i", 1, N - 1)
+    s1 = Statement("sb", ("t", "i"), ti,
+                   sched(("t", "i"), 0, v("t"), 0, v("i")),
+                   writes=[wr("B", v("i"))],
+                   reads=[rd("A", v("i") - 1), rd("A", v("i")), rd("A", v("i") + 1)])
+    s2 = Statement("sa", ("t", "i"), ti,
+                   sched(("t", "i"), 0, v("t"), 1, v("i")),
+                   writes=[wr("A", v("i"))], reads=[rd("B", v("i"))])
+    k = Kernel("jacobi-1d", {}, [load("A", 0, N), s1, s2, store("A", 0, N)])
+    # skewed tiling: hyperplanes t and t+i (valid: all dep distances satisfy
+    # τ·d ≥ 0), the paper's Fig. 3 tiling
+    til = {"sb": Tiling(((1, 0), (1, 1)), (b, b)),
+           "sa": Tiling(((1, 0), (1, 1)), (b, b))}
+    return KernelCase(k, til, ("sb", "sa"))
+
+
+@register("jacobi-2d")
+def jacobi_2d(scale: int = 1) -> KernelCase:
+    N, T, b = 10 * scale, 4 * scale, 4
+    dom = rng("t", 0, T) + rng("i", 1, N - 1) + rng("j", 1, N - 1)
+    s1 = Statement("sb", ("t", "i", "j"), dom,
+                   sched(("t", "i", "j"), 0, v("t"), 0, v("i"), v("j")),
+                   writes=[wr("B", v("i"), v("j"))],
+                   reads=[rd("A", v("i"), v("j")), rd("A", v("i"), v("j") - 1),
+                          rd("A", v("i"), v("j") + 1), rd("A", v("i") + 1, v("j")),
+                          rd("A", v("i") - 1, v("j"))])
+    s2 = Statement("sa", ("t", "i", "j"), dom,
+                   sched(("t", "i", "j"), 0, v("t"), 1, v("i"), v("j")),
+                   writes=[wr("A", v("i"), v("j"))], reads=[rd("B", v("i"), v("j"))])
+    k = Kernel("jacobi-2d", {}, [load("A", 0, N, N), s1, s2, store("A", 0, N, N)])
+    # band tiling (t, t+i) — the I/O-optimizing shape [4]: j streams inside
+    t2 = Tiling(((1, 0, 0), (1, 1, 0)), (b, b))
+    return KernelCase(k, {"sb": t2, "sa": t2}, ("sb", "sa"))
+
+
+@register("seidel-2d")
+def seidel_2d(scale: int = 1) -> KernelCase:
+    N, T, b = 10 * scale, 4 * scale, 4
+    dom = rng("t", 0, T) + rng("i", 1, N - 1) + rng("j", 1, N - 1)
+    reads = [rd("A", v("i") + di, v("j") + dj)
+             for di in (-1, 0, 1) for dj in (-1, 0, 1)]
+    s = Statement("s", ("t", "i", "j"), dom,
+                  sched(("t", "i", "j"), 0, v("t"), v("i"), v("j")),
+                  writes=[wr("A", v("i"), v("j"))], reads=reads)
+    k = Kernel("seidel-2d", {}, [load("A", 0, N, N), s, store("A", 0, N, N)])
+    # dependences include (0,1,-1), (1,0,-1), (1,-1,-1) … → skewed band tiling
+    t2 = Tiling(((1, 0, 0), (2, 1, 1)), (b, b))
+    return KernelCase(k, {"s": t2}, ("s",))
+
+
+@register("heat-3d")
+def heat_3d(scale: int = 1) -> KernelCase:
+    N, T, b = 8 * scale, 4 * scale, 4
+    dom = (rng("t", 0, T) + rng("i", 1, N - 1) + rng("j", 1, N - 1)
+           + rng("k", 1, N - 1))
+
+    def star(arr):
+        out = [rd(arr, v("i"), v("j"), v("k"))]
+        for dim, dv in (("i", v("i")), ("j", v("j")), ("k", v("k"))):
+            for d in (-1, 1):
+                idx = {n: v(n) for n in ("i", "j", "k")}
+                idx[dim] = dv + d
+                out.append(rd(arr, idx["i"], idx["j"], idx["k"]))
+        return out
+
+    s1 = Statement("sb", ("t", "i", "j", "k"), dom,
+                   sched(("t", "i", "j", "k"), 0, v("t"), 0, v("i"), v("j"), v("k")),
+                   writes=[wr("B", v("i"), v("j"), v("k"))], reads=star("A"))
+    s2 = Statement("sa", ("t", "i", "j", "k"), dom,
+                   sched(("t", "i", "j", "k"), 0, v("t"), 1, v("i"), v("j"), v("k")),
+                   writes=[wr("A", v("i"), v("j"), v("k"))], reads=star("B"))
+    k = Kernel("heat-3d", {}, [load("A", 0, N, N, N), s1, s2,
+                               store("A", 0, N, N, N)])
+    # heat-3d has same-t star reads of B (sa reads B[i±1] written by sb at the
+    # same t), so the band tiling needs the Pluto-style per-statement time
+    # interleave 2t / 2t+1 to stay valid: φ = ((2t+s)/b, (2t+s+i)/b).
+    t_sb = Tiling(((2, 0, 0, 0), (2, 1, 0, 0)), (2 * b, 2 * b), (0, 0))
+    t_sa = Tiling(((2, 0, 0, 0), (2, 1, 0, 0)), (2 * b, 2 * b), (1, 1))
+    return KernelCase(k, {"sb": t_sb, "sa": t_sa}, ("sb", "sa"))
+
+
+# ---------------------------------------------------- the paper's Fig. 1 form
+
+def jacobi_1d_paper(N: int = 16, T: int = 8, b1: int = 4, b2: int = 4) -> KernelCase:
+    """Single-assignment Jacobi-1D exactly as Figure 1 of the paper
+    (a[t][i] form, load/compute/store processes, tiling hyperplanes t and
+    t+i).  Channels 1-3: load→compute, 4-6: compute→compute, 7: →store."""
+    loadst = Statement("load", ("i",), rng("i", 0, N + 2),
+                       sched(("i",), 0, v("i"), 0),
+                       writes=[wr("a", E(0), v("i"))])
+    comp = Statement("compute", ("t", "i"),
+                     [ge(v("t"), 1), le(v("t"), E(T)), ge(v("i"), 1), le(v("i"), E(N))],
+                     sched(("t", "i"), 1, v("t"), v("i")),
+                     writes=[wr("a", v("t"), v("i"))],
+                     reads=[rd("a", v("t") - 1, v("i") - 1),
+                            rd("a", v("t") - 1, v("i")),
+                            rd("a", v("t") - 1, v("i") + 1)])
+    storest = Statement("store", ("i",), rng("i", 1, N + 1),
+                        sched(("i",), 2, v("i"), 0),
+                        reads=[rd("a", E(T), v("i"))])
+    k = Kernel("jacobi-1d-paper", {}, [loadst, comp, storest])
+    til = {"compute": Tiling(((1, 0), (1, 1)), (b1, b2))}
+    return KernelCase(k, til, ("compute",))

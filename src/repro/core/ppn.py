@@ -1,0 +1,121 @@
+"""Polyhedral Process Networks (paper §2.3).
+
+A PPN is (P, C): processes = iteration domain + sequential *local* schedule
+(the leading 2d+1 constants of the program schedule are dropped — order is
+local to the process, the global order is driven by dataflow); channels =
+partition of the direct dependences, canonically one channel per
+(producer process, consumer read reference).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .dataflow import DepEdges, Kernel, direct_dependences, enumerate_domain, eval_exprs
+from .schedule import AffineSchedule
+from .tiling import Tiling
+
+
+@dataclass
+class Process:
+    name: str
+    dims: Tuple[str, ...]
+    schedule: AffineSchedule                 # local order over dims
+    pts: np.ndarray                          # enumerated domain (N × d)
+    tiling: Optional[Tiling] = None
+    stmt_rank: int = 0                       # position in original program text
+    global_sched: Optional[AffineSchedule] = None   # original 2d+1 timestamp
+
+    def local_ts(self, pts: np.ndarray, params: Mapping[str, int]) -> np.ndarray:
+        """Timestamps under the (possibly tiled) local schedule: (φ…, base…)."""
+        base = eval_exprs(self.schedule.exprs, self.dims, pts, params)
+        if self.tiling is None:
+            return base
+        phi = self.tiling.tile_coords_of(pts)
+        return np.concatenate([phi, base], axis=1)
+
+    def global_ts(self, pts: np.ndarray, params: Mapping[str, int]) -> np.ndarray:
+        """Program-wide timestamp for sizing: (c0, φ…, rest of the 2d+1
+        schedule) — the leading 2d+1 constant still orders whole statement
+        nests (load → compute → store), the tile coordinates order tiles
+        within the tiled nest, and statements interleave inside a tile as in
+        the original program.  Keeping c0 first makes timestamps comparable
+        across tiled and untiled processes."""
+        if self.global_sched is not None:
+            base = eval_exprs(self.global_sched.exprs, self.dims, pts, params)
+        else:
+            rank = np.full((len(pts), 1), self.stmt_rank, dtype=np.int64)
+            base = np.concatenate(
+                [rank, eval_exprs(self.schedule.exprs, self.dims, pts, params)],
+                axis=1)
+        if self.tiling is None:
+            return base
+        phi = self.tiling.tile_coords_of(pts)
+        return np.concatenate([base[:, :1], phi, base[:, 1:]], axis=1)
+
+    @property
+    def tile_depth(self) -> int:
+        return self.tiling.n if self.tiling is not None else 0
+
+
+@dataclass
+class Channel:
+    """A channel with its dataflow relation (edge list form).
+
+    ``depth`` tags channels produced by SPLIT: 1..n = crossing hyperplane k,
+    n+1 = intra-tile, None = original (unsplit) channel.
+    """
+
+    producer: str
+    consumer: str
+    ref: int
+    array: str
+    src_pts: np.ndarray
+    dst_pts: np.ndarray
+    depth: Optional[int] = None
+
+    @property
+    def name(self) -> str:
+        d = f"@{self.depth}" if self.depth is not None else ""
+        return f"{self.producer}->{self.consumer}.{self.array}[{self.ref}]{d}"
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.src_pts.shape[0])
+
+
+@dataclass
+class PPN:
+    kernel_name: str
+    params: Dict[str, int]
+    processes: Dict[str, Process]
+    channels: List[Channel]
+
+    @staticmethod
+    def from_kernel(kernel: Kernel, params: Optional[Mapping[str, int]] = None,
+                    tilings: Optional[Mapping[str, Tiling]] = None) -> "PPN":
+        """Canonical PPN: one process per statement, one channel per
+        (producer, consumer read reference); local schedules are the identity
+        over the loop counters (same order as the original program)."""
+        params = dict(kernel.params, **(params or {}))
+        tilings = dict(tilings or {})
+        procs: Dict[str, Process] = {}
+        for rank, s in enumerate(kernel.statements):
+            procs[s.name] = Process(
+                name=s.name, dims=s.dims,
+                schedule=AffineSchedule.identity(s.dims),
+                pts=enumerate_domain(s, params),
+                tiling=tilings.get(s.name),
+                stmt_rank=rank,
+                global_sched=s.schedule,
+            )
+        chans = [Channel(e.producer, e.consumer, e.ref, e.array,
+                         e.src_pts, e.dst_pts)
+                 for e in direct_dependences(kernel, params)]
+        return PPN(kernel.name, params, procs, chans)
+
+    def channels_between(self, producer: str, consumer: str) -> List[Channel]:
+        return [c for c in self.channels
+                if c.producer == producer and c.consumer == consumer]

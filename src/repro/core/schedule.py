@@ -1,0 +1,59 @@
+"""Affine schedules and lexicographic-order constraint builders.
+
+A schedule maps an iteration vector to a multidimensional timestamp ordered by
+``≪`` (lexicographic).  The paper partitions ``≪`` by *depth*:
+``≪ = ≪¹ ⊎ … ⊎ ≪ᵈ`` with ``u ≪ᵏ v  iff  u[:k-1] == v[:k-1] ∧ u[k-1] < v[k-1]``.
+
+The builders below return constraint lists (conjunctions) or lists of
+constraint lists (disjunctions over depth) over whatever variable space the
+caller has renamed the timestamp expressions into.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Mapping, Sequence
+
+from .affine import Constraint, LinExpr, eq, lt
+
+
+@dataclass
+class AffineSchedule:
+    """Timestamp expressions over named dims (+ parameters)."""
+
+    dims: tuple
+    exprs: List[LinExpr]
+
+    def rename(self, mapping: Mapping[str, str]) -> List[LinExpr]:
+        return [e.rename(mapping) for e in self.exprs]
+
+    def eval(self, env: Mapping[str, int]) -> tuple:
+        return tuple(e.eval(env) for e in self.exprs)
+
+    def __len__(self) -> int:
+        return len(self.exprs)
+
+    @staticmethod
+    def identity(dims: Sequence[str]) -> "AffineSchedule":
+        return AffineSchedule(tuple(dims), [LinExpr.var(d) for d in dims])
+
+
+# -- lexicographic constraint builders ---------------------------------------
+
+def lex_lt_at_depth(ts_a: Sequence[LinExpr], ts_b: Sequence[LinExpr],
+                    k: int) -> List[Constraint]:
+    """Conjunction for ``ts_a ≪ᵏ ts_b`` (k is 1-based)."""
+    cons = [eq(ts_a[i], ts_b[i]) for i in range(k - 1)]
+    cons.append(lt(ts_a[k - 1], ts_b[k - 1]))
+    return cons
+
+
+def lex_lt_pieces(ts_a: Sequence[LinExpr], ts_b: Sequence[LinExpr]) -> List[List[Constraint]]:
+    """Disjunction (list of conjunctions) for strict ``ts_a ≪ ts_b``."""
+    depth = min(len(ts_a), len(ts_b))
+    return [lex_lt_at_depth(ts_a, ts_b, k) for k in range(1, depth + 1)]
+
+
+def prefix_eq(ts_a: Sequence[LinExpr], ts_b: Sequence[LinExpr],
+              n: int) -> List[Constraint]:
+    """Conjunction for ``ts_a ≈ⁿ ts_b`` (first n coordinates equal)."""
+    return [eq(ts_a[i], ts_b[i]) for i in range(n)]

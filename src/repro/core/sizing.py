@@ -1,0 +1,91 @@
+"""Channel sizing (paper §4, heuristic of [1] Bee+Cl@k-style).
+
+We bound each channel by its maximal occupancy — the largest number of values
+written but not yet (finally) read — under the tiled sequential execution of
+the program (the global schedule the tiling induces; any self-timed execution
+that respects the channel's blocking semantics needs at most this for FIFO
+channels).  The paper's heuristic then rounds the capacity to a power of two;
+splitting produces lower-dimensional pieces for which the bound is tighter —
+occasionally *reducing* total storage (gemm in Table 1), which we reproduce.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Tuple
+
+import numpy as np
+
+from .ppn import PPN, Channel
+
+
+def _global_ts(ppn: PPN, proc_name: str, pts: np.ndarray) -> np.ndarray:
+    """Global timestamp: (tile coords…, original 2d+1 schedule) — statements
+    interleave inside each tile as in the original program (the paper's tiled
+    execution), so loop-carried cross-statement channels size correctly."""
+    return ppn.processes[proc_name].global_ts(pts, ppn.params)
+
+
+def channel_capacity(ppn: PPN, c: Channel) -> int:
+    """Max #values in flight under the tiled sequential schedule."""
+    if c.num_edges == 0:
+        return 0
+    wts = _global_ts(ppn, c.producer, c.src_pts)
+    rts = _global_ts(ppn, c.consumer, c.dst_pts)
+    width = max(wts.shape[1], rts.shape[1])
+
+    def pad(ts: np.ndarray) -> np.ndarray:
+        if ts.shape[1] < width:
+            ts = np.concatenate(
+                [ts, np.full((len(ts), width - ts.shape[1]), -(10 ** 9),
+                             dtype=np.int64)], axis=1)
+        return ts
+
+    wts, rts = pad(wts), pad(rts)
+    # A value occupies the channel from its write to its LAST read
+    # (multiplicity keeps it live).  Deduplicate identical producer instances.
+    src_keys = np.unique(c.src_pts, axis=0, return_inverse=True)
+    uniq, inv = src_keys
+    n_vals = len(uniq)
+    write_ts = np.zeros((n_vals, width), dtype=np.int64)
+    last_read = np.full((n_vals, width), -(10 ** 9), dtype=np.int64)
+    for e in range(c.num_edges):
+        vid = inv[e]
+        write_ts[vid] = wts[e]
+        # lexicographic max of read timestamps
+        if _lex_le(last_read[vid], rts[e]):
+            last_read[vid] = rts[e]
+    # Sweep: +1 at write, -1 after last read.  Reads at a timestamp happen
+    # before writes at the same timestamp (operand read precedes result write).
+    events: List[Tuple[Tuple[int, ...], int, int]] = []
+    for vid in range(n_vals):
+        events.append((tuple(write_ts[vid]), 1, +1))
+        events.append((tuple(last_read[vid]), 0, -1))
+    events.sort()
+    occ = peak = 0
+    for _, _, delta in events:
+        occ += delta
+        peak = max(peak, occ)
+    return peak
+
+
+def _lex_le(a: np.ndarray, b: np.ndarray) -> bool:
+    for x, y in zip(a.tolist(), b.tolist()):
+        if x < y:
+            return True
+        if x > y:
+            return False
+    return True
+
+
+def pow2_size(capacity: int) -> int:
+    """The paper's sizing heuristic rounds capacities to powers of two."""
+    if capacity <= 0:
+        return 0
+    return 1 << (int(capacity - 1).bit_length())
+
+
+def size_channels(ppn: PPN, pow2: bool = False) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for c in ppn.channels:
+        cap = channel_capacity(ppn, c)
+        out[c.name] = pow2_size(cap) if pow2 else cap
+    return out

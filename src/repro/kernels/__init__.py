@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot-spots (validated in interpret mode
+on CPU; selected on TPU by ops.py wrappers):
+
+    stencil_fifo     — the paper's Fig. 3 tiled stencil with VMEM FIFO
+                       channels (HBM traffic T·2N → 2N)
+    flash_attention  — blocked causal GQA attention (triangular block skip,
+                       online softmax in VMEM scratch)
+    gla_timemix      — chunkwise-parallel RWKV-6/GLA core: (hd×hd) fp32
+                       state carried in VMEM across the sequential chunk
+                       grid (the paper's t−1→t FIFO stream), MXU matmuls
+                       in-chunk, overflow-safe pairwise decay form
+"""

@@ -1,0 +1,3 @@
+from .kernel import flash_attention
+from .ops import attention_op
+from .ref import attention_ref

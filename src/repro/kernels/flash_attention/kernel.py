@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: blocked causal GQA flash attention.
+
+Grid (batch, q-head, q-block, kv-block); the (m, l, acc) online-softmax state
+lives in VMEM scratch carried across the kv-block grid dimension (sequential
+innermost on TPU).  BlockSpecs tile q/k/v into (Bq, hd)/(Bk, hd) VMEM blocks
+— MXU-aligned when Bq, Bk, hd are multiples of 128 (hd = 128 on every
+assigned arch; head_dim 64 archs pad or run 64×128 tiles at half MXU
+utilization, noted in DESIGN.md).
+
+GQA uses the framework's h = g·KV + kv head grouping: the kv head for query
+head h is h % KV, expressed in the k/v index_map — no kv replication in HBM.
+
+Causal masking is per-element within the diagonal block; fully-masked blocks
+are skipped via @pl.when (on TPU this prunes ~half the MXU work — the same
+triangular saving the XLA path cannot express, cf. EXPERIMENTS §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+            bq: int, bk: int, causal: bool):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    run = (not causal) or (kj * bk <= qi * bq + bq - 1)   # any unmasked elem?
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)                # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG)
+        m_prev, l_prev, acc_prev = m_sc[...], l_sc[...], acc_sc[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=1, keepdims=True)
+        acc_new = acc_prev * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_sc[...], l_sc[...], acc_sc[...] = m_new, l_new, acc_new
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128, interpret: bool = True, scale=None):
+    """q: (B, S, H, hd); k, v: (B, S, KV, hd) → (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    scale = hd ** -0.5 if scale is None else scale
+    qt = (q * scale).transpose(0, 2, 1, 3)                # (B, H, S, hd)
+    kt = k.transpose(0, 2, 1, 3)                          # (B, KV, S, hd)
+    vt = v.transpose(0, 2, 1, 3)
+    grid = (B, H, S // bq, S // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j: (b, h % KV, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j: (b, h % KV, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)                      # (B, S, H, hd)

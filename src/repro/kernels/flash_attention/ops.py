@@ -1,0 +1,26 @@
+"""Jit'd wrapper: Pallas flash attention on TPU, chunked-XLA oracle elsewhere.
+
+`use_kernel=None` auto-selects: the kernel on TPU backends, the reference on
+CPU (the dry-run compiles the XLA path; the kernel is validated in interpret
+mode by tests/test_kernels.py)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention
+from .ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_kernel",
+                                             "interpret"))
+def attention_op(q, k, v, causal: bool = True, use_kernel=None,
+                 interpret: bool = True):
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        return flash_attention(q, k, v, causal=causal,
+                               interpret=interpret and
+                               jax.default_backend() != "tpu")
+    return attention_ref(q, k, v, causal=causal)

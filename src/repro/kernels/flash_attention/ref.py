@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the flash-attention kernel: the model stack's chunked
+online-softmax attention (models.attention.chunked_attention)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...models.attention import chunked_attention
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q: (B, S, H, hd); k, v: (B, S, KV, hd), GQA via h % KV."""
+    return chunked_attention(q, k, v, causal=causal,
+                             q_chunk=q.shape[1], kv_chunk=k.shape[1])

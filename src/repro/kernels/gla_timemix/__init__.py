@@ -1,0 +1,3 @@
+from .kernel import gla_timemix
+from .ops import timemix_op
+from .ref import timemix_ref

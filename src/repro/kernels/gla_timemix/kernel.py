@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: chunkwise-parallel RWKV-6 / GLA time-mix.
+
+Grid (batch, head, chunk) with the chunk dimension sequential: the
+(hd × hd) fp32 state lives in VMEM scratch and is carried across chunks —
+the inter-chunk state stream is exactly the t−1 → t FIFO channel the
+paper's classifier certifies for this layer (DESIGN.md §2); in-chunk work
+is three MXU matmuls over (C × hd) tiles instead of S sequential steps.
+
+Numerics match the sequential oracle because within a chunk the decay
+ratios exp(cl_t − cl_s) are formed from the chunk-local log-decay cumsum
+(bounded exponents).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, state_sc, *, C: int,
+            hd: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_sc[...] = jnp.zeros_like(state_sc)
+
+    r = r_ref[0, 0].astype(jnp.float32)          # (C, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)             # (hd,)
+
+    cl = jnp.cumsum(lw, axis=0)                  # inclusive
+    cl_prev = cl - lw                            # exclusive
+    tot = cl[-1:]                                # (1, hd)
+
+    state = state_sc[...]
+    rdec = r * jnp.exp(cl_prev)                  # exponents ≤ 0: safe
+    y_inter = jax.lax.dot_general(rdec, state, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    # intra-chunk decays via PAIRWISE differences: cl_prev[t] − cl[s] ≤ 0 for
+    # t > s, so the exponent is bounded — the factored rdec·(k·e^{−cl}) form
+    # overflows fp32 once the chunk's cumulative decay passes e⁸⁸ (fast
+    # channels at chunk ≥ 64)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    diff = cl_prev[:, None, :] - cl[None, :, :]           # (C,C,hd)
+    dec = jnp.where((ti > si)[..., None], diff, -jnp.inf)
+    att = jnp.sum(r[:, None, :] * k[None, :, :] * jnp.exp(dec), axis=-1)
+    y_intra = jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_diag = jnp.sum(r * u[None] * k, axis=1, keepdims=True) * v
+    o_ref[0, 0] = (y_inter + y_intra + y_diag).astype(o_ref.dtype)
+
+    kdec = k * jnp.exp(tot - cl)
+    state_sc[...] = jnp.exp(tot).T * state + jax.lax.dot_general(
+        kdec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def gla_timemix(r, k, v, logw, u, *, chunk: int = 64,
+                interpret: bool = True):
+    """r/k/v/logw: (B, S, H, hd); u: (H, hd) → (B, S, H, hd)."""
+    B, S, H, hd = r.shape
+    assert S % chunk == 0, (S, chunk)
+    tr = lambda a: a.transpose(0, 2, 1, 3)       # (B, H, S, hd)
+    grid = (B, H, S // chunk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, C=chunk, hd=hd),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, hd), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(tr(r), tr(k), tr(v), tr(logw), u)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,23 @@
+"""Jit'd wrapper: Pallas chunked GLA/RWKV-6 core on TPU, sequential-scan
+oracle elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import gla_timemix
+from .ref import timemix_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_kernel",
+                                             "interpret"))
+def timemix_op(r, k, v, logw, u, chunk: int = 64, use_kernel=None,
+               interpret: bool = True):
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        return gla_timemix(r, k, v, logw, u, chunk=chunk,
+                           interpret=interpret and
+                           jax.default_backend() != "tpu")
+    return timemix_ref(r, k, v, logw, u)

@@ -1,0 +1,32 @@
+"""Oracle for the RWKV-6 / gated-linear-attention time-mix core.
+
+Per-step recurrence (the sequential ground truth):
+
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+r, k, v: (B, S, H, hd); w = exp(logw) ∈ (0,1) per (t, channel); u: (H, hd).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def timemix_ref(r, k, v, logw, u):
+    B, S, H, hd = r.shape
+    r32, k32, v32 = (a.astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    u32 = u.astype(jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                     # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]             # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkd->bhd", rt, state + u32[None, :, :, None] * kv)
+        state = wt[..., None] * state + kv
+        return state, y
+
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, s0, tuple(jnp.moveaxis(a, 1, 0) for a in (r32, k32, v32, w)))
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype)            # (B,S,H,hd)

@@ -1,0 +1,3 @@
+from .kernel import jacobi_fifo
+from .ops import hbm_traffic_model, jacobi_fifo_op, jacobi_naive_op
+from .ref import jacobi_1d

@@ -1,0 +1,35 @@
+"""Jit'd public wrapper for the FIFO-streamed stencil kernel, with the
+naive (HBM round-trip per timestep) path as the measured baseline and an
+HBM-traffic model for the benchmark."""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import jacobi_fifo
+from .ref import jacobi_1d
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "block", "interpret"))
+def jacobi_fifo_op(x, steps: int, block: int = 256, interpret: bool = True):
+    return jacobi_fifo(x, steps, block, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def jacobi_naive_op(x, steps: int):
+    return jacobi_1d(x, steps)
+
+
+def hbm_traffic_model(n: int, steps: int, dtype_bytes: int = 4) -> Dict[str, float]:
+    """Bytes moved to/from HBM (the roofline 'memory' term numerator).
+
+    naive: every timestep reads and writes the array (the addressable-buffer
+    pattern); fifo: one read + one write total — cross-tile dependences live
+    in the VMEM FIFOs (paper's channel split, sizes (T+1)·2 per depth)."""
+    naive = steps * 2 * n * dtype_bytes
+    fifo = 2 * n * dtype_bytes
+    return {"naive_bytes": float(naive), "fifo_bytes": float(fifo),
+            "reduction": naive / fifo}

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the FIFO-streamed Jacobi-1D stencil kernel.
+
+Semantics: T steps of  a[i] ← (a[i-1] + a[i] + a[i+1]) / 3  with zero
+(Dirichlet) boundaries — the paper's motivating kernel (Fig. 1) with the
+load/store processes at the array ends.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def jacobi_1d(a0: jnp.ndarray, steps: int) -> jnp.ndarray:
+    a = a0.astype(jnp.float32)
+    for _ in range(steps):
+        left = jnp.concatenate([jnp.zeros((1,), a.dtype), a[:-1]])
+        right = jnp.concatenate([a[1:], jnp.zeros((1,), a.dtype)])
+        a = (left + a + right) / 3.0
+    return a.astype(a0.dtype)

@@ -1,0 +1,377 @@
+"""Structural cost analysis over post-partitioning HLO text.
+
+XLA's `compiled.cost_analysis()` visits every instruction exactly once —
+`while` bodies (jax.lax.scan over layers / microbatches / chunks) are NOT
+multiplied by their trip counts, which would understate a 126-layer model by
+126×.  This walker parses the optimized HLO, recovers loop trip counts from
+the scan-counter compare in each while condition, and accumulates:
+
+    flops             2·M·N·K for dots (+1/elem for everything else)
+    bytes             operand + result bytes of top-level instructions
+                      (fusion internals excluded — XLA's own convention)
+    collective bytes  operand bytes of all-reduce / all-gather /
+                      reduce-scatter / all-to-all / collective-permute,
+                      per collective kind
+
+all multiplied by the product of enclosing loop trip counts.  Shapes in
+post-SPMD HLO are per-device, so every number reported here is per-device.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e4m3b11fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_elems_bytes(dtype: str, dims: str) -> Tuple[int, int]:
+    elems = 1
+    if dims:
+        for d in dims.split(","):
+            elems *= int(d)
+    return elems, elems * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _all_shapes(text: str) -> List[Tuple[str, str]]:
+    return _SHAPE_RE.findall(text)
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_shapes: List[Tuple[str, str]]
+    operand_text: str
+    attr_text: str
+    called: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    is_fusion: bool = False
+    types: Dict[str, List[Tuple[str, str]]] = field(default_factory=dict)
+
+    def operand_shapes(self, ins: Instr) -> List[Tuple[str, str]]:
+        """Resolve %ref operands via this computation's symbol table."""
+        out: List[Tuple[str, str]] = []
+        for ref in re.findall(r"%([\w.\-]+)", ins.operand_text):
+            out.extend(self.types.get(ref, ()))
+        # constants / inline literals have no refs; also allow inline types
+        out.extend(_all_shapes(ins.operand_text))
+        return out
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_LHS = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPCODE = re.compile(r"\s*([\w\-]+)\(")
+_ARRAY_T = re.compile(r"^[a-z0-9]+\[[0-9,]*\]\S*")
+_CALLED = re.compile(
+    r"(?:calls=|to_apply=|condition=|body=|branch_computations=\{)\s*%?([\w.\-]+(?:\s*,\s*%?[\w.\-]+)*)")
+
+
+def _balanced(text: str, start: int) -> int:
+    """Index just past the paren matching text[start] == '('."""
+    depth = 0
+    for i in range(start, len(text)):
+        if text[i] == "(":
+            depth += 1
+        elif text[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(text)
+
+
+def _parse_instr(line: str) -> Optional[Tuple[str, str, str, str, str]]:
+    m = _LHS.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    # result type: tuple "(…)" (may contain /*index=N*/ comments) or array
+    if rest.startswith("("):
+        end = _balanced(rest, 0)
+        out_t, rest = rest[:end], rest[end:]
+    else:
+        mt = _ARRAY_T.match(rest)
+        if not mt:
+            return None
+        out_t, rest = mt.group(0), rest[mt.end():]
+    mo = _OPCODE.match(rest)
+    if not mo:
+        return None
+    opcode = mo.group(1)
+    op_start = mo.end() - 1
+    op_end = _balanced(rest, op_start)
+    operands = rest[op_start + 1:op_end - 1]
+    attrs = rest[op_end:]
+    return name, out_t, opcode, operands, attrs
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.rstrip()
+        if not stripped:
+            continue
+        bare = stripped.strip()
+        if bare.endswith("{") and _COMP_HDR.match(bare):
+            name = _COMP_HDR.match(bare).group(1)
+            cur = Computation(name, is_fusion="fused" in name)
+            comps[name] = cur
+            continue
+        if bare == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        parsed = _parse_instr(stripped)
+        if not parsed:
+            continue
+        name, out_t, opcode, operands, attrs = parsed
+        called: List[str] = []
+        for cm in _CALLED.finditer(attrs):
+            for part in cm.group(1).split(","):
+                called.append(part.strip().lstrip("%"))
+        ins = Instr(name, opcode, _all_shapes(out_t), operands, attrs, called)
+        cur.instrs.append(ins)
+        cur.types[name] = ins.out_shapes
+    return comps
+
+
+def _while_trip_count(cond: Computation) -> int:
+    """Scan loops compare the counter against a constant bound.  The compare
+    may be wrapped in a fusion, so take the largest integer constant in the
+    (tiny) condition computation — for jax.lax.scan that is the trip count."""
+    best = 0
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            m = re.fullmatch(r"-?\d+", ins.operand_text.strip())
+            if m:
+                best = max(best, abs(int(m.group(0))))
+    return max(best, 1)
+
+
+def _group_size(attrs: str) -> int:
+    """Replica-group size of a collective: explicit {{0,1},{2,3}} or iota
+    [groups,size]<=[n] form; defaults to 2 when absent (conservative)."""
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{([0-9, ]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> int:
+    out_elems = 1
+    for dt, dims in ins.out_shapes:
+        e, _ = _shape_elems_bytes(dt, dims)
+        out_elems *= max(e, 1)
+    opnds = comp.operand_shapes(ins)
+    if not opnds:
+        return 2 * out_elems
+    _, dims = opnds[0]
+    lhs_dims = [int(d) for d in dims.split(",")] if dims else []
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attr_text)
+    k = 1
+    if m and m.group(1):
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+    return 2 * out_elems * max(k, 1)
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    per_collective: Dict[str, float] = field(default_factory=dict)
+    collective_count: Dict[str, int] = field(default_factory=dict)
+    loops: List[Tuple[str, int]] = field(default_factory=list)
+
+    def as_dict(self) -> Dict:
+        return {"flops": self.flops, "bytes": self.bytes,
+                "collective_bytes": self.collective_bytes,
+                "per_collective": dict(self.per_collective),
+                "collective_count": dict(self.collective_count),
+                "loops": list(self.loops)}
+
+
+def analyze(text: str, entry: Optional[str] = None) -> HloStats:
+    comps = parse_hlo(text)
+    if not comps:
+        return HloStats()
+    if entry is None:
+        entry = next((n for n in comps if n.startswith("main")), None) \
+            or next(iter(comps))
+    stats = HloStats()
+    visiting: set = set()
+
+    NO_BYTES = ("parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "while", "call", "conditional")
+
+    def _fusion_bytes(ins: Instr, comp: Computation) -> float:
+        """Bytes at a fusion boundary, slice-aware: a parameter consumed only
+        by dynamic-slice reads slice-size, not the full (often scan-stacked)
+        buffer; a root dynamic-update-slice writes update-size in place."""
+        called = comps.get(ins.called[0]) if ins.called else None
+        refs = re.findall(r"%([\w.\-]+)", ins.operand_text)
+        opnd_shapes = [comp.types.get(r, [("f32", "")])[0] for r in refs]
+        if called is None:
+            return (sum(_shape_elems_bytes(dt, d)[1] for dt, d in opnd_shapes)
+                    + sum(_shape_elems_bytes(dt, d)[1] for dt, d in ins.out_shapes))
+        # map parameter index -> name, and collect consumption classes
+        pnames: Dict[int, str] = {}
+        for fi in called.instrs:
+            if fi.opcode == "parameter":
+                m = re.fullmatch(r"(\d+)", fi.operand_text.strip())
+                if m:
+                    pnames[int(m.group(1))] = fi.name
+        total = 0.0
+        root = called.instrs[-1] if called.instrs else None
+        for idx, (dt, dims) in enumerate(opnd_shapes):
+            pname = pnames.get(idx)
+            full = _shape_elems_bytes(dt, dims)[1]
+            if pname is None:
+                total += full
+                continue
+            uses = [fi for fi in called.instrs
+                    if re.search(rf"%{re.escape(pname)}\b", fi.operand_text)]
+            if uses and all(u.opcode in ("dynamic-slice", "dynamic-update-slice")
+                            for u in uses):
+                sliced = 0
+                for u in uses:
+                    if u.opcode == "dynamic-slice":
+                        sliced += sum(_shape_elems_bytes(dt2, d2)[1]
+                                      for dt2, d2 in u.out_shapes)
+                    else:
+                        # buffer operand of in-place update: no full read
+                        pass
+                total += sliced
+            else:
+                total += full
+        out_bytes = sum(_shape_elems_bytes(dt, d)[1] for dt, d in ins.out_shapes)
+        if root is not None and root.opcode == "dynamic-update-slice":
+            # in-place update: write update-size, not the whole buffer
+            urefs = re.findall(r"%([\w.\-]+)", root.operand_text)
+            if len(urefs) >= 2:
+                upd = called.types.get(urefs[1])
+                if upd:
+                    out_bytes = sum(_shape_elems_bytes(dt2, d2)[1]
+                                    for dt2, d2 in upd)
+        return total + out_bytes
+
+    def visit(comp_name: str, mult: float):
+        if comp_name not in comps or comp_name in visiting:
+            return
+        comp = comps[comp_name]
+        visiting.add(comp_name)
+        for ins in comp.instrs:
+            out_elems = out_bytes = 0
+            for dt, dims in ins.out_shapes:
+                e, b = _shape_elems_bytes(dt, dims)
+                out_elems += e
+                out_bytes += b
+            opnd_shapes = comp.operand_shapes(ins)
+            opnd_bytes = sum(_shape_elems_bytes(dt, dims)[1]
+                             for dt, dims in opnd_shapes)
+            if ins.opcode == "dot":
+                stats.flops += mult * _dot_flops(ins, comp)
+            elif ins.opcode == "convolution":
+                stats.flops += mult * 2 * out_elems
+            elif ins.opcode == "fusion":
+                # count flops inside the fused computation, but bytes only at
+                # the fusion boundary
+                for cn in ins.called:
+                    visit_fusion_flops(cn, mult)
+            elif ins.opcode not in ("parameter", "constant", "tuple",
+                                    "get-tuple-element", "bitcast", "copy",
+                                    "while", "call", "conditional"):
+                stats.flops += mult * out_elems
+            if ins.opcode in _COLLECTIVES:
+                # wire-traffic model (ring algorithms), per device:
+                #   all-gather: (g-1)·shard   all-reduce: 2(g-1)/g·full
+                #   reduce-scatter: (g-1)/g·full   all-to-all: (g-1)/g·full
+                #   collective-permute: 1·payload
+                g = _group_size(ins.attr_text)
+                factor = {"all-gather": g - 1,
+                          "all-reduce": 2 * (g - 1) / max(g, 1),
+                          "reduce-scatter": (g - 1) / max(g, 1),
+                          "all-to-all": (g - 1) / max(g, 1),
+                          "collective-permute": 1.0}[ins.opcode]
+                cb = opnd_bytes * factor * mult
+                stats.collective_bytes += cb
+                stats.per_collective[ins.opcode] = \
+                    stats.per_collective.get(ins.opcode, 0.0) + cb
+                stats.collective_count[ins.opcode] = \
+                    stats.collective_count.get(ins.opcode, 0) + int(mult)
+            if ins.opcode == "fusion":
+                stats.bytes += mult * _fusion_bytes(ins, comp)
+            elif ins.opcode == "dynamic-slice":
+                stats.bytes += mult * 2 * out_bytes
+            elif ins.opcode == "dynamic-update-slice":
+                upd = opnd_shapes[1] if len(opnd_shapes) > 1 else None
+                ub = _shape_elems_bytes(*upd)[1] if upd else out_bytes
+                stats.bytes += mult * 2 * ub
+            elif ins.opcode not in NO_BYTES:
+                stats.bytes += mult * (opnd_bytes + out_bytes)
+            if ins.opcode == "while":
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.attr_text)
+                bm = re.search(r"body=%?([\w.\-]+)", ins.attr_text)
+                if cm and bm and cm.group(1) in comps:
+                    # Prefer XLA's own annotation when present
+                    tm = re.search(r'known_trip_count.*?"n"\s*:\s*"?(\d+)',
+                                   ins.attr_text)
+                    trip = (int(tm.group(1)) if tm
+                            else _while_trip_count(comps[cm.group(1)]))
+                    stats.loops.append((ins.name, trip))
+                    visit(bm.group(1), mult * trip)
+                    visit(cm.group(1), mult * (trip + 1))
+            elif ins.opcode in ("call", "conditional", "sort",
+                                "custom-call", "reduce", "reduce-window",
+                                "scatter", "select-and-scatter", "map"):
+                for cn in ins.called:
+                    visit(cn, mult)
+        visiting.discard(comp_name)
+
+    def visit_fusion_flops(comp_name: str, mult: float):
+        if comp_name not in comps or comp_name in visiting:
+            return
+        comp = comps[comp_name]
+        visiting.add(comp_name)
+        for ins in comp.instrs:
+            out_elems = sum(_shape_elems_bytes(dt, dims)[0]
+                            for dt, dims in ins.out_shapes)
+            if ins.opcode == "dot":
+                stats.flops += mult * _dot_flops(ins, comp)
+            elif ins.opcode not in ("parameter", "constant", "tuple",
+                                    "get-tuple-element", "bitcast"):
+                stats.flops += mult * out_elems
+            for cn in ins.called:
+                visit_fusion_flops(cn, mult)
+        visiting.discard(comp_name)
+
+    visit(entry, 1.0)
+    return stats

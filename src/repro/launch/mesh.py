@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+`make_production_mesh` is a FUNCTION (never a module-level constant) so that
+importing this module never touches jax device state.  Single-pod: 16×16
+(256 chips, TPU v5e pod); multi-pod: 2×16×16 = 512 chips, the "pod" axis
+crossing the data-center network.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 2):
+    """Small mesh over host devices, for tests/examples."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link

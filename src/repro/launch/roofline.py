@@ -1,0 +1,74 @@
+"""Roofline report CLI: renders EXPERIMENTS.md tables from the dry-run cache.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--cache results/dryrun]
+        [--markdown]
+"""
+import argparse
+import json
+import pathlib
+from typing import Dict, List
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def load(cache: pathlib.Path) -> List[Dict]:
+    out = []
+    for f in sorted(cache.glob("*.json")):
+        try:
+            out.append(json.loads(f.read_text()))
+        except Exception:
+            pass
+    return out
+
+
+def render(recs: List[Dict], mesh: str, markdown: bool = False) -> str:
+    rows = []
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            rows.append((r["arch"], r["cell"], "SKIP", "", "", "", "", "", ""))
+            continue
+        if r.get("status") != "ok":
+            rows.append((r["arch"], r["cell"], "ERR", "", "", "", "", "",
+                         r.get("error", "")[:40]))
+            continue
+        rf = r["roofline"]
+        uf = rf.get("useful_flops_ratio")
+        rows.append((
+            r["arch"], r["cell"], rf["dominant"],
+            f"{rf['compute_s']:.3e}", f"{rf['memory_s']:.3e}",
+            f"{rf['collective_s']:.3e}",
+            f"{r['memory']['peak_bytes_per_device']/2**30:.2f}",
+            f"{uf:.3f}" if uf else "",
+            f"{r.get('compile_s','')}s"))
+    hdr = ("arch", "cell", "dominant", "compute_s", "memory_s",
+           "collective_s", "HBM_GiB", "useful", "compile")
+    if markdown:
+        lines = ["| " + " | ".join(hdr) + " |",
+                 "|" + "---|" * len(hdr)]
+        lines += ["| " + " | ".join(str(c) for c in row) + " |" for row in rows]
+        return "\n".join(lines)
+    w = [22, 12, 10, 11, 11, 12, 8, 7, 8]
+    lines = [" ".join(h.ljust(x) for h, x in zip(hdr, w))]
+    lines += [" ".join(str(c).ljust(x) for c, x in zip(row, w)) for row in rows]
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cache", default="results/dryrun")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    recs = load(pathlib.Path(args.cache))
+    for mesh in ("16x16", "2x16x16"):
+        print(f"### mesh {mesh} "
+              f"(chips={'512' if mesh == '2x16x16' else '256'}, "
+              f"v5e: {PEAK_FLOPS_BF16/1e12:.0f} TF/s bf16, "
+              f"{HBM_BW/1e9:.0f} GB/s HBM, {ICI_BW/1e9:.0f} GB/s ICI)")
+        print(render(recs, mesh, args.markdown))
+        print()
+
+
+if __name__ == "__main__":
+    main()

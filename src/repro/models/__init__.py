@@ -1,0 +1,5 @@
+"""Model zoo: the 10 assigned architectures, built from shared layers."""
+from .model import Model, build
+from .sharding import Rules
+
+__all__ = ["Model", "Rules", "build"]

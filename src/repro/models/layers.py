@@ -1,0 +1,125 @@
+"""Shared layers: norms, MLPs, embeddings, rotary embeddings."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import PSpec, bias, linear, norm_scale
+from .sharding import Rules
+
+
+# ------------------------------------------------------------------- norms
+
+def norm_plan(cfg: ModelConfig, d: Optional[int] = None) -> Dict:
+    d = d or cfg.d_model
+    p = {"scale": norm_scale(d)}
+    if cfg.norm == "layernorm":
+        p["bias"] = bias(d)
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    x32 = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mean = x32.mean(-1, keepdims=True)
+        var = ((x32 - mean) ** 2).mean(-1, keepdims=True)
+        y = (x32 - mean) * jax.lax.rsqrt(var + 1e-5)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = (x32 * x32).mean(-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(ms + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head(x, scale, eps=1e-6):
+    """qk-norm: per-head RMS norm."""
+    x32 = x.astype(jnp.float32)
+    ms = (x32 * x32).mean(-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- MLP
+
+def mlp_plan(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "silu":           # SwiGLU
+        return {"wi_gate": linear(D, F, names=("wfsdp", "wtp")),
+                "wi_up": linear(D, F, names=("wfsdp", "wtp")),
+                "wo": linear(F, D, names=("wtp", "wfsdp"))}
+    return {"wi": linear(D, F, names=("wfsdp", "wtp")),
+            "wo": linear(F, D, names=("wtp", "wfsdp"))}
+
+
+def apply_mlp(p, x, cfg: ModelConfig, rules: Rules):
+    if cfg.act == "silu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wi_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, p["wi_up"])
+        h = jax.nn.silu(g) * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+        h = jax.nn.gelu(h) if cfg.act == "gelu" else jnp.square(jax.nn.relu(h))
+    h = rules.constrain(h, "batch", "seq", "mlp_act")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+# -------------------------------------------------------------- embeddings
+
+def embed_plan(cfg: ModelConfig) -> Dict:
+    V, D = cfg.padded_vocab(), cfg.d_model
+    p = {"embedding": PSpec((V, D), ("vocab_act", "wfsdp"), "normal", 1.0)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = PSpec((D, V), ("wfsdp", "vocab_act"), "normal", 1.0)
+    return p
+
+
+def embed_tokens(p, tokens, cfg: ModelConfig, rules: Rules):
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    return rules.constrain(x, "batch", "seq", "embed_act")
+
+
+def logits_from(p, x, cfg: ModelConfig, rules: Rules):
+    if cfg.tie_embeddings:
+        out = jnp.einsum("bsd,vd->bsv", x, p["embedding"])
+    else:
+        out = jnp.einsum("bsd,dv->bsv", x, p["unembed"])
+    out = rules.constrain(out, "batch", "seq", "vocab_act")
+    if cfg.padded_vocab() != cfg.vocab_size:       # mask padding ids
+        pad = cfg.padded_vocab() - cfg.vocab_size
+        mask = jnp.concatenate([jnp.zeros(cfg.vocab_size), jnp.full(pad, -1e9)])
+        out = out + mask.astype(out.dtype)
+    return out
+
+
+def cross_entropy(logits, labels, vocab_size: int) -> jnp.ndarray:
+    """Mean next-token loss, fp32, numerically stable."""
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(logits.max(-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.exp(shifted).sum(-1)) + m[..., 0]
+    gold = jnp.take_along_axis(shifted, labels[..., None], axis=-1)[..., 0] + m[..., 0]
+    return (lse - gold).mean()
+
+
+# ------------------------------------------------------------------ rotary
+
+def rope(x, positions, theta: float):
+    """x: (B, S, H, hd), positions: (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs      # (B,S,half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int, offset=0):
+    pos = jnp.arange(seq)[:, None] + offset
+    dim = jnp.arange(d // 2)[None, :]
+    angle = pos / (10000 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)

@@ -1,0 +1,477 @@
+"""Model assembly for all assigned architecture families.
+
+Families:
+    dense / moe   — decoder-only transformer (GQA, optional MoE MLP)
+    hybrid        — jamba: super-blocks of `attn_period` sublayers
+                    (1 attention + rest Mamba), MoE every `moe_every` layers
+    ssm           — RWKV-6 (attention-free)
+    encdec        — whisper: encoder + decoder with cross-attention
+
+All stacks scan over layers (or super-blocks) with stacked parameters, so the
+compiled HLO is one layer body — essential for the 512-device dry-run.
+
+KV/state caches are FULL stacked arrays carried through the scan *carry* (not
+xs/ys): XLA aliases the carry in place, so decode keeps exactly one cache
+buffer and writes only the current token's slot per layer.  Train mode
+supports two-level (√L) remat via ParallelConfig.remat_block.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ParallelConfig
+from . import rwkv, ssm
+from .attention import (attention, attn_plan, cache_read_layer,
+                        chunked_attention, cross_attention)
+from .common import (PSpec, abstract_params, init_params, partition_specs,
+                     plan_map, stack_plan)
+from .layers import (apply_mlp, apply_norm, cross_entropy, embed_plan,
+                     embed_tokens, logits_from, mlp_plan, norm_plan,
+                     sinusoidal_positions)
+from .moe import apply_moe, moe_plan
+from .sharding import Rules
+
+
+def _tree_idx(tree, i: int):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _slice2(tree_leaf, i, j):
+    """(A, B, …) → […] at [i, j] with traced indices."""
+    sl = jax.lax.dynamic_slice_in_dim(tree_leaf, i, 1, axis=0)
+    sl = jax.lax.dynamic_slice_in_dim(sl[0], j, 1, axis=0)
+    return sl[0]
+
+
+def _write2(tree_leaf, i, j, val):
+    start = (i, j) + (0,) * (tree_leaf.ndim - 2)
+    return jax.lax.dynamic_update_slice(tree_leaf,
+                                        val.astype(tree_leaf.dtype)[None, None],
+                                        start)
+
+
+def _slice1(tree_leaf, i):
+    return jax.lax.dynamic_slice_in_dim(tree_leaf, i, 1, axis=0)[0]
+
+
+def _write1(tree_leaf, i, val):
+    start = (i,) + (0,) * (tree_leaf.ndim - 1)
+    return jax.lax.dynamic_update_slice(tree_leaf,
+                                        val.astype(tree_leaf.dtype)[None],
+                                        start)
+
+
+def _kv_cache_plan(cfg: ModelConfig, batch: int, seq: int, layers: int,
+                   dtype: str = "bfloat16") -> Dict:
+    KV, hd = cfg.num_kv_heads, cfg.head_dim_
+    sh = (layers, batch, seq, KV, hd)
+    nm = (None, "batch", "kv_seq", "kv_heads", None)
+    if dtype == "int8":
+        ssh = (layers, batch, seq, KV, 1)
+        return {"k": PSpec(sh, nm, "zeros", dtype=jnp.int8),
+                "v": PSpec(sh, nm, "zeros", dtype=jnp.int8),
+                "k_scale": PSpec(ssh, nm, "zeros", dtype=jnp.float32),
+                "v_scale": PSpec(ssh, nm, "zeros", dtype=jnp.float32)}
+    return {"k": PSpec(sh, nm, "zeros", dtype=jnp.bfloat16),
+            "v": PSpec(sh, nm, "zeros", dtype=jnp.bfloat16)}
+
+
+def _dict_plan_from_shapes(shapes: Dict, layers: int) -> Dict:
+    out = {}
+    for key, (shape, names, dtype) in shapes.items():
+        out[key] = PSpec((layers,) + shape, (None,) + names, "zeros",
+                         dtype=jnp.dtype(dtype))
+    return out
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    par: ParallelConfig
+    plan: Dict
+
+    # ------------------------------------------------------------- params
+    def init(self, rng):
+        return init_params(rng, self.plan)
+
+    def abstract_params(self):
+        return abstract_params(self.plan)
+
+    def param_specs(self, rules: Rules):
+        return partition_specs(self.plan, rules)
+
+    # -------------------------------------------------------------- cache
+    def cache_plan(self, batch: int, seq: int) -> Dict:
+        cfg = self.cfg
+        kvdt = self.par.kv_cache_dtype
+        if cfg.family in ("dense", "moe"):
+            return _kv_cache_plan(cfg, batch, seq, cfg.num_layers, kvdt)
+        if cfg.family == "hybrid":
+            nsb = cfg.num_layers // cfg.attn_period
+            plan = _kv_cache_plan(cfg, batch, seq, nsb, kvdt)
+            mam = ssm.mamba_cache_shapes(cfg, batch)
+            for key, (shape, names, dtype) in mam.items():
+                plan[f"mamba_{key}"] = PSpec(
+                    (nsb, cfg.attn_period - 1) + shape,
+                    (None, None) + names, "zeros", dtype=jnp.dtype(dtype))
+            return plan
+        if cfg.family == "ssm":
+            return _dict_plan_from_shapes(
+                rwkv.rwkv_cache_shapes(cfg, batch), cfg.num_layers)
+        if cfg.family == "encdec":
+            plan = _kv_cache_plan(cfg, batch, seq, cfg.num_layers)
+            KV, hd = cfg.num_kv_heads, cfg.head_dim_
+            sh = (cfg.num_layers, batch, seq, KV, hd)
+            nm = (None, "batch", "kv_seq", "kv_heads", None)
+            plan["xk"] = PSpec(sh, nm, "zeros", dtype=jnp.bfloat16)
+            plan["xv"] = PSpec(sh, nm, "zeros", dtype=jnp.bfloat16)
+            return plan
+        raise ValueError(cfg.family)
+
+    def abstract_cache(self, batch: int, seq: int):
+        return abstract_params(self.cache_plan(batch, seq))
+
+    def cache_specs(self, batch: int, seq: int, rules: Rules):
+        return partition_specs(self.cache_plan(batch, seq), rules)
+
+    def init_cache(self, batch: int, seq: int):
+        return init_params(jax.random.PRNGKey(0), self.cache_plan(batch, seq))
+
+    # ------------------------------------------------------------ forward
+    def forward(self, params, batch: Dict, rules: Rules, mode: str,
+                cache=None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        if mode == "decode":
+            pos = batch["pos"]
+            positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+            kv_len = pos + 1
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            kv_len = None
+
+        x = embed_tokens(params["embed"], tokens, cfg, rules)
+
+        body = {
+            "dense": self._dense_stack, "moe": self._dense_stack,
+            "hybrid": self._hybrid_stack, "ssm": self._rwkv_stack,
+            "encdec": self._encdec_stack,
+        }[cfg.family]
+        x, new_cache, aux = body(params, x, positions, rules, mode, cache,
+                                 kv_len, batch)
+        x = apply_norm(params["final_norm"], x, cfg)
+        logits = logits_from(params["embed"], x, cfg, rules)
+        return logits, new_cache, aux
+
+    def loss_fn(self, params, batch: Dict, rules: Rules):
+        logits, _, aux = self.forward(params, batch, rules, "train")
+        labels = jnp.concatenate(
+            [batch["tokens"][:, 1:], batch["tokens"][:, -1:]], axis=1)
+        loss = cross_entropy(logits[:, :-1], labels[:, :-1], self.cfg.vocab_size)
+        total = loss + 0.01 * aux
+        return total, {"loss": loss, "aux": aux}
+
+    def prefill_fn(self, params, batch: Dict, rules: Rules, cache):
+        logits, cache, _ = self.forward(params, batch, rules, "prefill", cache)
+        return logits[:, -1:], cache
+
+    def decode_fn(self, params, batch: Dict, cache, rules: Rules):
+        logits, cache, _ = self.forward(params, batch, rules, "decode", cache)
+        return logits, cache
+
+    # ------------------------------------------------------- scan plumbing
+    def _scan_layers(self, body, x, cache, stacked_params, mode: str,
+                     two_level: bool = True):
+        """Scan `body(lp, i, x, cache) -> (x, aux, cache)` over layers with
+        the cache in the carry.  Train mode: remat (optionally two-level)."""
+        par = self.par
+        L = jax.tree.leaves(stacked_params)[0].shape[0]
+
+        def step(carry, xs):
+            x, aux, cache = carry
+            lp, i = xs
+            x, a, cache = body(lp, i, x, cache)
+            return (x, aux + a, cache), None
+
+        use_remat = par.remat == "full" and mode == "train"
+        nb = par.remat_block if mode == "train" else 0
+        if use_remat:
+            # prevent_cse=True: with False, XLA CSEs the layer's leading
+            # x.astype(f32) (norms) across the checkpoint boundary and saves
+            # the *f32* residual — 2× remat memory on the 405B config
+            step = jax.checkpoint(step, prevent_cse=True)
+        carry0 = (x, jnp.zeros((), jnp.float32), cache)
+        if nb and two_level and L % nb == 0 and nb < L:
+            outer = L // nb
+            resh = jax.tree.map(
+                lambda a: a.reshape((outer, nb) + a.shape[1:]), stacked_params)
+
+            def outer_step(carry, xs):
+                lp_blk, i0 = xs
+                inner, _ = jax.lax.scan(
+                    step, carry, (lp_blk, i0 + jnp.arange(nb)))
+                return inner, None
+
+            if use_remat:
+                outer_step = jax.checkpoint(outer_step, prevent_cse=True)
+            (x, aux, cache), _ = jax.lax.scan(
+                outer_step, carry0,
+                (resh, jnp.arange(outer) * nb))
+        else:
+            (x, aux, cache), _ = jax.lax.scan(
+                step, carry0, (stacked_params, jnp.arange(L)))
+        return x, aux, cache
+
+    # ----------------------------------------------------- family stacks
+    def _dense_stack(self, params, x, positions, rules, mode, cache, kv_len,
+                     batch):
+        cfg = self.cfg
+        is_moe = cfg.num_experts > 0
+
+        def body(lp, i, x, cache):
+            h = apply_norm(lp["attn_norm"], x, cfg)
+            a, cache = attention(lp["attn"], h, cfg, rules, mode, positions,
+                                 cache, kv_len, layer_idx=i)
+            aux = jnp.zeros((), jnp.float32)
+            if cfg.parallel_block:
+                if is_moe:
+                    m, aux = apply_moe(lp["mlp"], h, cfg, rules)
+                else:
+                    m = apply_mlp(lp["mlp"], h, cfg, rules)
+                x = x + a + m
+            else:
+                x = x + a
+                h2 = apply_norm(lp["mlp_norm"], x, cfg)
+                if is_moe:
+                    m, aux = apply_moe(lp["mlp"], h2, cfg, rules)
+                else:
+                    m = apply_mlp(lp["mlp"], h2, cfg, rules)
+                x = x + m
+            x = rules.constrain(x, "batch", "seq", "embed_act")
+            return x, aux, cache
+
+        x, aux, cache = self._scan_layers(body, x, cache, params["layers"], mode)
+        return x, cache, aux
+
+    def _hybrid_stack(self, params, x, positions, rules, mode, cache, kv_len,
+                      batch):
+        cfg = self.cfg
+        P_ = cfg.attn_period
+        attn_j = P_ // 2
+
+        # per-sublayer remat inside the superblock: the backward of one
+        # superblock otherwise keeps 7 Mamba selective-scan working sets live
+        if mode == "train":
+            mamba_train = jax.checkpoint(
+                lambda mp, hh: ssm.apply_mamba(mp, hh, cfg, rules, "train",
+                                               None)[0], prevent_cse=False)
+
+        def body(sp, i, x, cache):
+            aux = jnp.zeros((), jnp.float32)
+            mi = di = ndense = 0
+            for j in range(P_):
+                use_moe = (j % cfg.moe_every == cfg.moe_offset % cfg.moe_every)
+                h = apply_norm(_tree_idx(sp["pre_norms"], j), x, cfg)
+                if j == attn_j:
+                    a, cache = attention(sp["attn"], h, cfg, rules, mode,
+                                         positions, cache, kv_len, layer_idx=i)
+                elif mode == "train":
+                    a = mamba_train(_tree_idx(sp["mamba"], mi), h)
+                    mi += 1
+                    x = x + a
+                    h2 = apply_norm(_tree_idx(sp["mlp_norms"], j), x, cfg)
+                    if use_moe:
+                        m, a2 = apply_moe(_tree_idx(sp["moe"], di), h2, cfg, rules)
+                        aux = aux + a2
+                        di += 1
+                    else:
+                        m = apply_mlp(_tree_idx(sp["mlp"], ndense), h2, cfg, rules)
+                        ndense += 1
+                    x = rules.constrain(x + m, "batch", "seq", "embed_act")
+                    continue
+                else:
+                    if cache is not None:
+                        mc = {"conv": _slice2(cache["mamba_conv"], i, mi),
+                              "ssm": _slice2(cache["mamba_ssm"], i, mi)}
+                    else:
+                        mc = None
+                    a, mc_new = ssm.apply_mamba(
+                        _tree_idx(sp["mamba"], mi), h, cfg, rules, mode, mc)
+                    if cache is not None and mc_new is not None:
+                        cache = dict(cache)
+                        cache["mamba_conv"] = _write2(
+                            cache["mamba_conv"], i, mi, mc_new["conv"])
+                        cache["mamba_ssm"] = _write2(
+                            cache["mamba_ssm"], i, mi, mc_new["ssm"])
+                    mi += 1
+                x = x + a
+                h2 = apply_norm(_tree_idx(sp["mlp_norms"], j), x, cfg)
+                if use_moe:
+                    m, a2 = apply_moe(_tree_idx(sp["moe"], di), h2, cfg, rules)
+                    aux = aux + a2
+                    di += 1
+                else:
+                    m = apply_mlp(_tree_idx(sp["mlp"], ndense), h2, cfg, rules)
+                    ndense += 1
+                x = x + m
+                x = rules.constrain(x, "batch", "seq", "embed_act")
+            return x, aux, cache
+
+        x, aux, cache = self._scan_layers(body, x, cache, params["layers"],
+                                          mode, two_level=False)
+        return x, cache, aux
+
+    def _rwkv_stack(self, params, x, positions, rules, mode, cache, kv_len,
+                    batch):
+        cfg = self.cfg
+
+        def body(lp, i, x, cache):
+            tmc = cmc = None
+            if cache is not None:
+                tmc = {"shift": _slice1(cache["tm_shift"], i),
+                       "state": _slice1(cache["tm_state"], i)}
+                cmc = {"shift": _slice1(cache["cm_shift"], i)}
+            h = apply_norm(lp["tm_norm"], x, cfg)
+            a, tm_new = rwkv.apply_time_mix(lp["tm"], h, cfg, rules, mode, tmc)
+            x = x + a
+            h2 = apply_norm(lp["cm_norm"], x, cfg)
+            m, cm_new = rwkv.apply_channel_mix(lp["cm"], h2, cfg, rules, mode, cmc)
+            x = x + m
+            x = rules.constrain(x, "batch", "seq", "embed_act")
+            if cache is not None:
+                cache = dict(cache)
+                cache["tm_shift"] = _write1(cache["tm_shift"], i, tm_new["shift"])
+                cache["tm_state"] = _write1(cache["tm_state"], i, tm_new["state"])
+                cache["cm_shift"] = _write1(cache["cm_shift"], i, cm_new["shift"])
+            return x, jnp.zeros((), jnp.float32), cache
+
+        x, aux, cache = self._scan_layers(body, x, cache, params["layers"], mode)
+        return x, cache, aux
+
+    def _encdec_stack(self, params, x, positions, rules, mode, cache, kv_len,
+                      batch):
+        cfg = self.cfg
+
+        # ---- encoder (train/prefill only; decode uses cached cross-KV)
+        enc_out = None
+        if mode != "decode":
+            frames = batch["frames"].astype(x.dtype)       # (B, S_enc, D) stub
+            e = frames + sinusoidal_positions(
+                frames.shape[1], cfg.d_model).astype(x.dtype)[None]
+            e = rules.constrain(e, "batch", "seq", "embed_act")
+
+            def enc_body(lp, i, e, cache_):
+                h = apply_norm(lp["attn_norm"], e, cfg)
+                a, _ = attention(lp["attn"], h, cfg, rules, "train",
+                                 jnp.zeros(e.shape[:2], jnp.int32),
+                                 None, None, causal=False)
+                e = e + a
+                h2 = apply_norm(lp["mlp_norm"], e, cfg)
+                e = e + apply_mlp(lp["mlp"], h2, cfg, rules)
+                return rules.constrain(e, "batch", "seq", "embed_act"), \
+                    jnp.zeros((), jnp.float32), cache_
+
+            enc_out, _, _ = self._scan_layers(enc_body, e, None,
+                                              params["encoder"], mode)
+            enc_out = apply_norm(params["enc_norm"], enc_out, cfg)
+
+        # positional embedding for decoder tokens
+        if mode == "decode":
+            x = x + sinusoidal_positions(1, cfg.d_model,
+                                         offset=batch["pos"]).astype(x.dtype)[None]
+        else:
+            x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+
+        from .attention import cache_write_layer
+
+        def dec_body(lp, i, x, cache):
+            h = apply_norm(lp["attn_norm"], x, cfg)
+            a, cache = attention(lp["attn"], h, cfg, rules, mode, positions,
+                                 cache, kv_len, layer_idx=i)
+            x = x + a
+            h2 = apply_norm(lp["xattn_norm"], x, cfg)
+            if mode == "decode":
+                xk = cache_read_layer(cache["xk"], i)
+                xv = cache_read_layer(cache["xv"], i)
+            else:
+                xk = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wk"])
+                xv = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wv"])
+                if mode == "prefill" and cache is not None:
+                    cache = dict(cache)
+                    cache["xk"] = cache_write_layer(cache["xk"], i, xk, rules)
+                    cache["xv"] = cache_write_layer(cache["xv"], i, xv, rules)
+            c = cross_attention(lp["xattn"], h2, (xk, xv), cfg, rules)
+            x = x + c
+            h3 = apply_norm(lp["mlp_norm"], x, cfg)
+            x = x + apply_mlp(lp["mlp"], h3, cfg, rules)
+            x = rules.constrain(x, "batch", "seq", "embed_act")
+            return x, jnp.zeros((), jnp.float32), cache
+
+        x, aux, cache = self._scan_layers(dec_body, x, cache,
+                                          params["decoder"], mode)
+        return x, cache, aux
+
+
+# ================================================================== builders
+
+def _dense_layer_plan(cfg: ModelConfig) -> Dict:
+    lp = {"attn_norm": norm_plan(cfg), "attn": attn_plan(cfg)}
+    if not cfg.parallel_block:
+        lp["mlp_norm"] = norm_plan(cfg)
+    lp["mlp"] = moe_plan(cfg) if cfg.num_experts else mlp_plan(cfg)
+    return lp
+
+
+def _hybrid_superblock_plan(cfg: ModelConfig) -> Dict:
+    P_ = cfg.attn_period
+    n_moe = sum(1 for j in range(P_)
+                if j % cfg.moe_every == cfg.moe_offset % cfg.moe_every)
+    n_dense = P_ - n_moe
+    from .ssm import mamba_plan
+    return {
+        "pre_norms": stack_plan(norm_plan(cfg), P_),
+        "mlp_norms": stack_plan(norm_plan(cfg), P_),
+        "attn": attn_plan(cfg),
+        "mamba": stack_plan(mamba_plan(cfg), P_ - 1),
+        "mlp": stack_plan(mlp_plan(cfg), n_dense),
+        "moe": stack_plan(moe_plan(cfg), n_moe),
+    }
+
+
+def _rwkv_layer_plan(cfg: ModelConfig) -> Dict:
+    return {"tm_norm": norm_plan(cfg), "tm": rwkv.rwkv_time_mix_plan(cfg),
+            "cm_norm": norm_plan(cfg), "cm": rwkv.rwkv_channel_mix_plan(cfg)}
+
+
+def _encdec_plans(cfg: ModelConfig) -> Tuple[Dict, Dict]:
+    enc = {"attn_norm": norm_plan(cfg), "attn": attn_plan(cfg),
+           "mlp_norm": norm_plan(cfg), "mlp": mlp_plan(cfg)}
+    dec = {"attn_norm": norm_plan(cfg), "attn": attn_plan(cfg),
+           "xattn_norm": norm_plan(cfg), "xattn": attn_plan(cfg),
+           "mlp_norm": norm_plan(cfg), "mlp": mlp_plan(cfg)}
+    return enc, dec
+
+
+def build(cfg: ModelConfig, par: ParallelConfig) -> Model:
+    plan: Dict = {"embed": embed_plan(cfg), "final_norm": norm_plan(cfg)}
+    if cfg.family in ("dense", "moe"):
+        plan["layers"] = stack_plan(_dense_layer_plan(cfg), cfg.num_layers)
+    elif cfg.family == "hybrid":
+        nsb = cfg.num_layers // cfg.attn_period
+        plan["layers"] = stack_plan(_hybrid_superblock_plan(cfg), nsb)
+    elif cfg.family == "ssm":
+        plan["layers"] = stack_plan(_rwkv_layer_plan(cfg), cfg.num_layers)
+    elif cfg.family == "encdec":
+        enc, dec = _encdec_plans(cfg)
+        plan["encoder"] = stack_plan(enc, cfg.encoder_layers)
+        plan["enc_norm"] = norm_plan(cfg)
+        plan["decoder"] = stack_plan(dec, cfg.num_layers)
+    else:
+        raise ValueError(cfg.family)
+    return Model(cfg, par, plan)

@@ -1,0 +1,180 @@
+"""RWKV-6 (Finch): attention-free time-mix with data-dependent per-channel
+decay, + squared-ReLU channel-mix.
+
+Train/prefill run the *chunkwise-parallel* form (matmul-bound, like chunked
+linear attention / GLA): within a chunk, intra-chunk contributions use decay
+ratios exp(cl_t − cl_s) from the log-decay cumsum; across chunks a
+(B, H, hd, hd) state is carried — again the uniform t−1 → t dependence the
+paper's classifier marks FIFO under sequence sharding.  Decode is one
+recurrent update, O(1) in sequence length.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import PSpec
+from .sharding import Rules
+
+LORA = 64
+
+
+def rwkv_time_mix_plan(cfg: ModelConfig) -> Dict:
+    D = cfg.d_model
+    H, hd = cfg.num_heads, cfg.head_dim_
+    return {
+        "mix_rkvwg": PSpec((5, D), (None, "norm"), "zeros"),
+        "wr": PSpec((D, H, hd), ("wfsdp", "heads", None), "normal", 1.0),
+        "wk": PSpec((D, H, hd), ("wfsdp", "heads", None), "normal", 1.0),
+        "wv": PSpec((D, H, hd), ("wfsdp", "heads", None), "normal", 1.0),
+        "wg": PSpec((D, H, hd), ("wfsdp", "heads", None), "normal", 1.0),
+        "wo": PSpec((H, hd, D), ("heads", None, "wfsdp"), "normal", 1.0),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x W_a) W_b))
+        "w0": PSpec((H, hd), ("heads", None), "zeros"),
+        "wa": PSpec((D, LORA), ("wfsdp", None), "normal", 1.0),
+        "wb": PSpec((LORA, H, hd), (None, "heads", None), "normal", 0.1),
+        "u": PSpec((H, hd), ("heads", None), "zeros"),      # current-token bonus
+        "ln_scale": PSpec((H, hd), ("heads", None), "ones"),  # per-head groupnorm
+    }
+
+
+def rwkv_channel_mix_plan(cfg: ModelConfig) -> Dict:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "mix_kr": PSpec((2, D), (None, "norm"), "zeros"),
+        "wk": PSpec((D, F), ("wfsdp", "wtp"), "normal", 1.0),
+        "wv": PSpec((F, D), ("wtp", "wfsdp"), "normal", 1.0),
+        "wr": PSpec((D, D), ("wfsdp", "wfsdp"), "normal", 1.0),
+    }
+
+
+def _token_shift(x, prev):
+    """prev-token features; prev: (B, D) last token of previous segment."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def apply_time_mix(p, x, cfg: ModelConfig, rules: Rules, mode: str,
+                   cache: Optional[Dict], chunk: int = 64
+                   ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """cache = {"shift": (B,D), "state": (B,H,hd,hd) fp32}."""
+    B, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim_
+    prev = cache["shift"].astype(x.dtype) if cache is not None else jnp.zeros((B, D), x.dtype)
+    xx = _token_shift(x, prev)
+    mix = jax.nn.sigmoid(p["mix_rkvwg"].astype(jnp.float32))        # (5, D)
+
+    def lerp(i):
+        return (x.astype(jnp.float32) * mix[i]
+                + xx.astype(jnp.float32) * (1 - mix[i])).astype(x.dtype)
+
+    r = jnp.einsum("bsd,dhk->bshk", lerp(0), p["wr"])
+    k = jnp.einsum("bsd,dhk->bshk", lerp(1), p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", lerp(2), p["wv"])
+    g = jnp.einsum("bsd,dhk->bshk", lerp(4), p["wg"])
+    r = rules.constrain(r, "batch", "seq", "heads", None)
+    k = rules.constrain(k, "batch", "seq", "heads", None)
+    v = rules.constrain(v, "batch", "seq", "heads", None)
+
+    # data-dependent decay in log space: logw ≤ 0
+    wln = (p["w0"].astype(jnp.float32)
+           + jnp.einsum("bsl,lhk->bshk",
+                        jnp.tanh(jnp.einsum("bsd,dl->bsl", lerp(3), p["wa"])
+                                 .astype(jnp.float32)),
+                        p["wb"].astype(jnp.float32)))
+    logw = -jnp.exp(wln)                                            # (B,S,H,hd)
+    u = p["u"].astype(jnp.float32)
+
+    state0 = (cache["state"] if cache is not None
+              else jnp.zeros((B, H, hd, hd), jnp.float32))
+
+    if mode == "decode":
+        r1, k1, v1 = (a[:, 0].astype(jnp.float32) for a in (r, k, v))
+        kv = k1[..., :, None] * v1[..., None, :]                    # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkd->bhd", r1, state0 + u[..., None] * kv)
+        state = jnp.exp(logw[:, 0])[..., None] * state0 + kv
+        y = y[:, None]                                              # (B,1,H,hd)
+    else:
+        nc = max(1, -(-S // min(chunk, S)))
+        while S % nc:
+            nc += 1
+        C = S // nc
+        rc = r.reshape(B, nc, C, H, hd).astype(jnp.float32)
+        kc = k.reshape(B, nc, C, H, hd).astype(jnp.float32)
+        vc = v.reshape(B, nc, C, H, hd).astype(jnp.float32)
+        lw = logw.reshape(B, nc, C, H, hd)
+        cl = jnp.cumsum(lw, axis=2)                                 # inclusive
+        cl_prev = cl - lw                                           # exclusive
+        tot = cl[:, :, -1]                                          # (B,nc,H,hd)
+
+        def chunk_step(state, inp):
+            rc_, kc_, vc_, cl_, clp_, tot_ = inp                    # (B,C,H,hd)…
+            # inter-chunk: r_t · (decay(≤t-1 from chunk start) * S_prev)
+            rdec = rc_ * jnp.exp(clp_)
+            y_inter = jnp.einsum("bthk,bhkd->bthd", rdec, state)
+            # intra-chunk decay via pairwise differences (exponent ≤ 0 where
+            # unmasked): the factored exp(clp)·exp(−cl) form overflows fp32
+            # for fast-decay channels once chunks exceed ~64 steps
+            diff = clp_[:, :, None] - cl_[:, None]                   # (B,C,C,H,hd)
+            tri = jnp.tril(jnp.ones((C, C), jnp.float32), -1)
+            dec = jnp.where(tri[None, :, :, None, None] > 0, diff, -jnp.inf)
+            att = jnp.einsum("bthk,bshk,btshk->bhts", rc_, kc_, jnp.exp(dec))
+            y_intra = jnp.einsum("bhts,bshd->bthd", att, vc_)
+            # current token bonus
+            y_diag = jnp.einsum("bthk,bthk->bth", rc_ * u, kc_)[..., None] * vc_
+            # state update: S ← exp(tot)·S + Σ_s exp(tot - cl_s) k_s v_sᵀ
+            kdec = kc_ * jnp.exp(tot_[:, None] - cl_)
+            state = jnp.exp(tot_)[..., None] * state + jnp.einsum(
+                "bshk,bshd->bhkd", kdec, vc_)
+            return state, y_inter + y_intra + y_diag
+
+        state, yc = jax.lax.scan(
+            chunk_step, state0,
+            tuple(jnp.moveaxis(a, 1, 0) for a in (rc, kc, vc, cl, cl_prev, tot)))
+        y = jnp.moveaxis(yc, 0, 1).reshape(B, S, H, hd)
+
+    # per-head groupnorm-lite + gate
+    ms = jnp.maximum((y * y).mean(-1, keepdims=True), 1e-12)
+    y = y * jax.lax.rsqrt(ms) * p["ln_scale"].astype(jnp.float32)
+    y = (y * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"])
+    new_cache = None
+    if cache is not None or mode != "train":
+        new_cache = {"shift": x[:, -1].astype(x.dtype), "state": state}
+    return out, new_cache
+
+
+def apply_channel_mix(p, x, cfg: ModelConfig, rules: Rules, mode: str,
+                      cache: Optional[Dict]) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """cache = {"shift": (B, D)}."""
+    B, S, D = x.shape
+    prev = cache["shift"].astype(x.dtype) if cache is not None else jnp.zeros((B, D), x.dtype)
+    xx = _token_shift(x, prev)
+    mix = jax.nn.sigmoid(p["mix_kr"].astype(jnp.float32))
+
+    def lerp(i):
+        return (x.astype(jnp.float32) * mix[i]
+                + xx.astype(jnp.float32) * (1 - mix[i])).astype(x.dtype)
+
+    k = jnp.einsum("bsd,df->bsf", lerp(0), p["wk"])
+    k = jnp.square(jax.nn.relu(k))
+    k = rules.constrain(k, "batch", "seq", "mlp_act")
+    vv = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", lerp(1), p["wr"])
+                        .astype(jnp.float32)).astype(x.dtype)
+    out = rr * vv
+    new_cache = None
+    if cache is not None or mode != "train":
+        new_cache = {"shift": x[:, -1].astype(x.dtype)}
+    return out, new_cache
+
+
+def rwkv_cache_shapes(cfg: ModelConfig, batch: int):
+    H, hd, D = cfg.num_heads, cfg.head_dim_, cfg.d_model
+    return {
+        "tm_shift": ((batch, D), ("batch", None), "bfloat16"),
+        "tm_state": ((batch, H, hd, hd), ("batch", "heads", None, None), "float32"),
+        "cm_shift": ((batch, D), ("batch", None), "bfloat16"),
+    }

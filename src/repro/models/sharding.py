@@ -1,0 +1,95 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+MaxText-style: tensors are annotated with *logical* axis names; a `Rules`
+object (derived from the arch's ParallelConfig + the physical mesh) maps them
+to mesh axes.  When a dimension does not divide the mapped mesh axes' product
+(e.g. smollm's 9 heads on a 16-way model axis), axes are dropped from the
+right until it does — the fallback is recorded so DESIGN.md / roofline can
+report where TP degenerated.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ParallelConfig
+
+
+@dataclass
+class Rules:
+    mesh: Mesh
+    table: Dict[str, Tuple[str, ...]]
+    dropped: List[Tuple[str, str]] = field(default_factory=list)
+
+    @staticmethod
+    def make(mesh: Mesh, par: ParallelConfig) -> "Rules":
+        t = {
+            "batch": par.batch_axes,
+            "seq": par.seq_axes,
+            "kv_seq": par.kv_seq_axes,
+            "embed_act": (),                 # activations replicated on d_model
+            "heads": par.tp_axes,
+            "kv_heads": par.tp_axes,
+            "mlp_act": par.tp_axes,
+            "vocab_act": par.tp_axes,
+            "experts": par.tp_axes,
+            "wfsdp": par.fsdp_axes,
+            "wtp": par.tp_axes,
+            # 2D sharding for large OUTPUT dims of weight matmuls: sharding a
+            # weight's *contraction* dim forces GSPMD to partial-sum the
+            # activations (an activation-sized all-reduce per matmul — 176k
+            # all-reduces/step on llama-405b); output dims shard freely and
+            # GSPMD gathers the (much smaller) weights instead.
+            "wtp2": tuple(dict.fromkeys(par.tp_axes + par.fsdp_axes)),
+            "norm": (),
+            None: (),
+        }
+        return Rules(mesh, t)
+
+    def _axes_for(self, name: Optional[str], size: int, used: set) -> Tuple[str, ...]:
+        axes = tuple(a for a in self.table.get(name, ()) if a in self.mesh.shape)
+        axes = tuple(a for a in axes if a not in used)
+        while axes:
+            prod = int(np.prod([self.mesh.shape[a] for a in axes]))
+            if size % prod == 0:
+                return axes
+            dropped = axes[-1]
+            axes = axes[:-1]
+            self.dropped.append((str(name), dropped))
+        return ()
+
+    def spec(self, shape: Sequence[int], names: Sequence[Optional[str]]) -> P:
+        assert len(shape) == len(names), (shape, names)
+        used: set = set()
+        parts = []
+        for size, name in zip(shape, names):
+            axes = self._axes_for(name, int(size), used)
+            used.update(axes)
+            if len(axes) == 0:
+                parts.append(None)
+            elif len(axes) == 1:
+                parts.append(axes[0])
+            else:
+                parts.append(tuple(axes))
+        return P(*parts)
+
+    def sharding(self, shape: Sequence[int], names: Sequence[Optional[str]]
+                 ) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, names))
+
+    def constrain(self, x, *names: Optional[str]):
+        """with_sharding_constraint by logical names."""
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(x.shape, names)))
+
+
+def spec_tree(rules: Rules, shapes, names):
+    """Map a pytree of shapes + a matching pytree of logical-name tuples to
+    PartitionSpecs."""
+    return jax.tree.map(lambda sh, nm: rules.spec(sh, nm), shapes, names,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(i, (int, str, type(None))) for i in x))

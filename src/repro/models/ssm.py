@@ -1,0 +1,132 @@
+"""Mamba (S6) selective state-space block for the hybrid (jamba) family.
+
+Train/prefill use a *blocked* selective scan: an outer sequential scan over
+sequence blocks carrying the (B, d_inner, d_state) state, with an associative
+scan inside each block — bounding the materialized (B, S_blk, d_inner,
+d_state) tensors.  Decode is a single recurrent update.
+
+The inter-block carried state is the textbook uniform dependence
+(block_t → block_{t+1}); when the sequence is sharded (SP), the planner
+classifies that channel FIFO → neighbor ppermute (see repro.comm).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import PSpec
+from .sharding import Rules
+
+
+def mamba_plan(cfg: ModelConfig) -> Dict:
+    D = cfg.d_model
+    di = cfg.ssm_expand * D
+    ds = cfg.ssm_state_dim
+    w = cfg.ssm_conv_width
+    return {
+        "in_proj": PSpec((D, 2 * di), ("wfsdp", "wtp"), "normal", 1.0),
+        "conv_w": PSpec((w, di), (None, "wtp"), "normal", 1.0),
+        "conv_b": PSpec((di,), ("wtp",), "zeros"),
+        "bc_proj": PSpec((di, 2 * ds), ("wtp", None), "normal", 1.0),
+        "dt_proj": PSpec((di, di), ("wtp", "wtp"), "normal", 1.0),
+        "dt_bias": PSpec((di,), ("wtp",), "zeros"),
+        "A_log": PSpec((di, ds), ("wtp", None), "zeros"),
+        "Dskip": PSpec((di,), ("wtp",), "ones"),
+        "out_proj": PSpec((di, D), ("wtp", "wfsdp"), "normal", 1.0),
+    }
+
+
+def _ssm_block_scan(decay, drive, h0):
+    """h_t = decay_t * h_{t-1} + drive_t within one block (assoc. scan).
+
+    decay/drive: (B, L, di, ds); h0: (B, di, ds)."""
+    def combine(a, b):
+        return a[0] * b[0], a[1] * b[0] + b[1]
+    cum_decay, acc = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+    h = acc + cum_decay * h0[:, None]
+    return h, h[:, -1]
+
+
+def apply_mamba(p, x, cfg: ModelConfig, rules: Rules, mode: str,
+                cache: Optional[Dict] = None, block: int = 512
+                ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x: (B,S,D) → (y, new_cache).
+
+    cache = {"conv": (B, w-1, di), "ssm": (B, di, ds)}."""
+    B, S, D = x.shape
+    di = cfg.ssm_expand * D
+    ds = cfg.ssm_state_dim
+    w = cfg.ssm_conv_width
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = rules.constrain(xin, "batch", "seq", "mlp_act")
+
+    if mode == "decode":
+        conv_state = jnp.concatenate([cache["conv"], xin.astype(cache["conv"].dtype)],
+                                     axis=1)                       # (B, w, di)
+        xc = jnp.einsum("bwd,wd->bd", conv_state, p["conv_w"]) + p["conv_b"]
+        xc = jax.nn.silu(xc)[:, None]                              # (B,1,di)
+        new_conv = conv_state[:, 1:]
+    else:
+        prev = (cache["conv"] if cache is not None
+                else jnp.zeros((B, w - 1, di), xin.dtype))
+        xpad = jnp.concatenate([prev.astype(xin.dtype), xin], axis=1)
+        xc = sum(xpad[:, i:i + S] * p["conv_w"][i] for i in range(w)) + p["conv_b"]
+        xc = jax.nn.silu(xc)
+        new_conv = xpad[:, -(w - 1):]
+
+    bc = jnp.einsum("bsd,dn->bsn", xc, p["bc_proj"]).astype(jnp.float32)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                             # (B,S,ds)
+    dt = jax.nn.softplus(jnp.einsum("bsd,de->bse", xc, p["dt_proj"])
+                         .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                   # (di, ds)
+
+    decay = jnp.exp(dt[..., None] * A)                             # (B,S,di,ds)
+    drive = (dt * xc.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+
+    h0 = (cache["ssm"].astype(jnp.float32) if cache is not None
+          else jnp.zeros((B, di, ds), jnp.float32))
+
+    if mode == "decode":
+        h = decay[:, 0] * h0 + drive[:, 0]
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None]
+        new_ssm = h
+    else:
+        nb = max(1, -(-S // min(block, S)))
+        while S % nb:                      # smallest divisor ≥ ceil(S/block)
+            nb += 1
+        Lb = S // nb
+        dec_b = decay.reshape(B, nb, Lb, di, ds)
+        drv_b = drive.reshape(B, nb, Lb, di, ds)
+
+        def step(h_carry, inp):
+            d_, r_ = inp
+            h_all, h_last = _ssm_block_scan(d_, r_, h_carry)
+            return h_last, h_all
+
+        new_ssm, h_seq = jax.lax.scan(
+            step, h0, (jnp.moveaxis(dec_b, 1, 0), jnp.moveaxis(drv_b, 1, 0)))
+        h_seq = jnp.moveaxis(h_seq, 0, 1).reshape(B, S, di, ds)
+        y = jnp.einsum("bsdn,bsn->bsd", h_seq, Cm)
+
+    y = (y + xc.astype(jnp.float32) * p["Dskip"].astype(jnp.float32))
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = rules.constrain(y, "batch", "seq", "mlp_act")
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    new_cache = None
+    if cache is not None or mode != "train":
+        new_cache = {"conv": new_conv.astype(xin.dtype),
+                     "ssm": new_ssm.astype(jnp.float32)}
+    return out, new_cache
+
+
+def mamba_cache_shapes(cfg: ModelConfig, batch: int):
+    di = cfg.ssm_expand * cfg.d_model
+    return {"conv": ((batch, cfg.ssm_conv_width - 1, di),
+                     ("batch", None, "mlp_act"), "bfloat16"),
+            "ssm": ((batch, di, cfg.ssm_state_dim),
+                    ("batch", "mlp_act", None), "float32")}

@@ -1,0 +1,3 @@
+from .batching import BatchSlots, ContinuousBatcher, Request
+
+__all__ = ["BatchSlots", "ContinuousBatcher", "Request"]

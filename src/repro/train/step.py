@@ -1,0 +1,130 @@
+"""The jitted train step: microbatched gradient accumulation (scan) + remat +
+clip + (8-bit) AdamW, with explicit in/out shardings for the production mesh.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ParallelConfig
+from ..models.common import abstract_params, partition_specs, plan_map
+from ..models.model import Model
+from ..models.sharding import Rules
+from ..optim import adamw_init, adamw_update, cosine_warmup
+from ..optim.quantized import BLOCK, quantize_array
+
+
+def _opt_state_spec_like(param_plan, rules: Rules, state_dtype: str):
+    """m/v shard exactly like their params (int8 q is param-shaped; the
+    per-block scale reuses the param's logical names with the divisibility
+    fallback handling the shrunken last dim)."""
+    def one(p):
+        if state_dtype == "int8":
+            from ..optim.quantized import scale_shape
+            names = p.names if p.shape else (None,)
+            return {"q": rules.spec(p.shape or (1,), names),
+                    "scale": rules.spec(scale_shape(p.shape), names)}
+        return rules.spec(p.shape, p.names)
+    return plan_map(one, param_plan)
+
+
+def _opt_state_abstract_like(param_plan, state_dtype: str):
+    def one(p):
+        if state_dtype == "int8":
+            from ..optim.quantized import scale_shape
+            return {"q": jax.ShapeDtypeStruct(p.shape or (1,), jnp.int8),
+                    "scale": jax.ShapeDtypeStruct(scale_shape(p.shape),
+                                                  jnp.float32)}
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return plan_map(one, param_plan)
+
+
+def make_train_state_specs(model: Model, rules: Rules):
+    pspecs = model.param_specs(rules)
+    sd = model.par.optimizer_state_dtype
+    ospec = _opt_state_spec_like(model.plan, rules, sd)
+    return {"params": pspecs,
+            "opt": {"m": ospec, "v": ospec, "step": P()}}
+
+
+def make_abstract_train_state(model: Model):
+    sd = model.par.optimizer_state_dtype
+    oabs = _opt_state_abstract_like(model.plan, sd)
+    return {"params": model.abstract_params(),
+            "opt": {"m": oabs, "v": oabs,
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+
+
+def init_train_state(model: Model, rng):
+    params = model.init(rng)
+    return {"params": params,
+            "opt": adamw_init(params, model.par.optimizer_state_dtype)}
+
+
+@dataclass
+class TrainStepBundle:
+    step_fn: Callable            # (state, batch) -> (state, metrics)
+    state_specs: Any
+    batch_spec: Any
+    model: Model
+    rules: Rules
+
+
+def make_train_step(model: Model, rules: Rules, *,
+                    lr: float = 3e-4, warmup: int = 100, total: int = 10000) -> TrainStepBundle:
+    cfg, par = model.cfg, model.par
+    lr_fn = cosine_warmup(lr, warmup, total)
+    m = par.num_microbatches
+    grad_accum_dtype = jnp.dtype(par.grad_accum_dtype)
+
+    def loss_fn(params, mb):
+        return model.loss_fn(params, mb, rules)
+
+    def train_step(state, batch):
+        params = state["params"]
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+
+        def to_mb(x):
+            # (B, …) → (m, B/m, …) with microbatch i = indices ≡ i (mod m):
+            # keeps every microbatch spread across all data shards (reshaping
+            # to (m, B/m) directly would place a whole microbatch on one
+            # shard and force a reshard).
+            xm = x.reshape((B // m, m) + x.shape[1:])
+            return jnp.moveaxis(xm, 1, 0)
+
+        mbs = jax.tree.map(to_mb, batch)
+
+        def accum(carry, mb):
+            g_acc, loss_acc = carry
+            (tot, met), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            g = jax.tree.map(lambda a, b: a + b.astype(grad_accum_dtype),
+                             g_acc, g)
+            return (g, loss_acc + met["loss"]), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, grad_accum_dtype), params)
+        (grads, loss_sum), _ = jax.lax.scan(accum, (g0, jnp.zeros((), jnp.float32)), mbs)
+        grads = jax.tree.map(lambda g: g / m, grads)
+
+        step = state["opt"]["step"]
+        new_params, new_opt, gnorm = adamw_update(
+            params, grads, state["opt"], lr_fn(step),
+            state_dtype=par.optimizer_state_dtype)
+        metrics = {"loss": loss_sum / m, "grad_norm": gnorm,
+                   "step": new_opt["step"]}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    state_specs = make_train_state_specs(model, rules)
+
+    def batch_spec(batch_abstract):
+        names = {"tokens": ("batch", "seq"), "frames": ("batch", "seq", "embed_act"),
+                 "pos": ()}
+        return {k: rules.spec(v.shape, names[k][:len(v.shape)])
+                for k, v in batch_abstract.items()}
+
+    return TrainStepBundle(train_step, state_specs, batch_spec, model, rules)

@@ -1,0 +1,9 @@
+import os
+
+# smoke tests and benches must see the single real CPU device (the 512-device
+# override is dryrun.py-local, never global)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,107 @@
+"""Classifier: paper's motivating examples + enumeration↔symbolic agreement."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AffineSchedule, Pattern, ProcSpace, Relation, Tiling,
+                        classify_channel, classify_symbolic, fifoize, ge, le, v)
+from repro.core.patterns import classify_edges
+from repro.core.polybench import jacobi_1d_paper
+from repro.core.ppn import PPN
+from repro.core.split import fifoize_relation
+
+DOM = [ge(v("t"), 1), le(v("t"), v("T")), ge(v("i"), 1), le(v("i"), v("N"))]
+ASSUME = [ge(v("N"), 8), ge(v("T"), 8), le(v("N"), 32), le(v("T"), 32)]
+TILED = ProcSpace(("t", "i"), AffineSchedule.identity(("t", "i")),
+                  Tiling(((1, 0), (1, 1)), (4, 4)))
+PLAIN = ProcSpace(("t", "i"), AffineSchedule.identity(("t", "i")))
+
+
+def test_paper_fig1_untiled_all_fifo():
+    case = jacobi_1d_paper(N=12, T=6)
+    ppn = PPN.from_kernel(case.kernel)
+    assert all(classify_channel(ppn, c) is Pattern.FIFO for c in ppn.channels)
+
+
+def test_paper_tiling_breaks_then_fifoize_recovers():
+    case = jacobi_1d_paper(N=12, T=6)
+    ppn = PPN.from_kernel(case.kernel, tilings=case.tilings)
+    broken = [c for c in ppn.channels
+              if classify_channel(ppn, c) is not Pattern.FIFO]
+    assert len(broken) == 3                      # deps 4, 5, 6 (paper §2.3)
+    ppn2, rep = fifoize(ppn)
+    assert len(rep.split_ok) == 3 and not rep.split_failed
+    assert all(classify_channel(ppn2, c) is Pattern.FIFO
+               for c in ppn2.channels)
+
+
+def test_symbolic_dep5_matches_paper():
+    rel5 = Relation.uniform(("t", "i"), (1, 0), DOM, DOM, params=("N", "T"))
+    assert classify_symbolic(rel5, PLAIN, PLAIN, ASSUME) is Pattern.FIFO
+    assert classify_symbolic(rel5, TILED, TILED, ASSUME) is not Pattern.FIFO
+    parts = fifoize_relation(rel5, TILED, TILED, ASSUME)
+    assert parts is not None and len(parts) == 3        # Fig. 3(c)
+    assert all(p is Pattern.FIFO for _, _, p in parts)
+
+
+@given(dt=st.integers(0, 2), di=st.integers(-2, 2))
+@settings(max_examples=12, deadline=None)
+def test_enumeration_symbolic_agree_on_uniform_deps(dt, di):
+    """Cross-validation: the compile-time (symbolic) classifier agrees with
+    exact enumeration for uniform dependences under the Fig. 3 tiling."""
+    if dt == 0 and di <= 0:
+        return                                  # not a forward dependence
+    N, T = 12, 8
+    rel = Relation.uniform(("t", "i"), (dt, di), DOM, DOM, params=("N", "T"))
+    sym = classify_symbolic(rel, TILED, TILED,
+                            [ge(v("N"), 8), le(v("N"), 16),
+                             ge(v("T"), 8), le(v("T"), 16)])
+    # enumeration at N=12, T=8
+    src, dst = [], []
+    for t in range(1, T + 1):
+        for i in range(1, N + 1):
+            t2, i2 = t + dt, i + di
+            if 1 <= t2 <= T and 1 <= i2 <= N:
+                src.append((t, i))
+                dst.append((t2, i2))
+    if not src:
+        return
+    src, dst = np.array(src), np.array(dst)
+    til = Tiling(((1, 0), (1, 1)), (4, 4))
+    sts = np.concatenate([til.tile_coords_of(src), src], axis=1)
+    dts_ = np.concatenate([til.tile_coords_of(dst), dst], axis=1)
+    enum = Pattern.of(*classify_edges(sts, dts_))
+    assert sym == enum
+
+
+def test_multiplicity_detected():
+    # one producer value read twice → in-order with multiplicity
+    src = np.array([[0], [0], [1], [1]])
+    dst = np.array([[0], [1], [2], [3]])
+    io, un = classify_edges(src, dst)
+    assert io and not un
+    assert Pattern.of(io, un) is Pattern.IN_ORDER_MULT
+
+
+def test_out_of_order_detected():
+    src = np.array([[0], [1], [2]])
+    dst = np.array([[2], [1], [0]])        # consumer reads reversed
+    io, un = classify_edges(src, dst)
+    assert not io and un
+
+
+def test_symbolic_3d_band_tiling():
+    """Symbolic classifier on the jacobi-2d band tiling (t, t+i): the three
+    A-array uniform dependences split into all-FIFO parts (Table 2 row)."""
+    dom3 = [ge(v("t"), 1), le(v("t"), v("T")),
+            ge(v("i"), 1), le(v("i"), v("N")),
+            ge(v("j"), 1), le(v("j"), v("N"))]
+    assume = [ge(v("N"), 8), le(v("N"), 16), ge(v("T"), 8), le(v("T"), 16)]
+    band = ProcSpace(("t", "i", "j"), AffineSchedule.identity(("t", "i", "j")),
+                     Tiling(((1, 0, 0), (1, 1, 0)), (4, 4)))
+    for shift in ((1, 0, 0), (1, 1, 0), (1, 0, 1)):
+        rel = Relation.uniform(("t", "i", "j"), shift, dom3, dom3,
+                               params=("N", "T"))
+        out = fifoize_relation(rel, band, band, assume)
+        assert out is not None, shift
+        assert all(p is Pattern.FIFO for _, _, p in out), shift

@@ -1,0 +1,71 @@
+"""Presburger-lite machinery: FM emptiness + integer search vs brute force."""
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Polyhedron, eq, ge, le, lt, v
+from repro.core.affine import LinExpr
+
+
+def brute_force_empty(poly: Polyhedron, bound: int = 6) -> bool:
+    vars_ = poly.vars()
+    for pt in itertools.product(range(-bound, bound + 1), repeat=len(vars_)):
+        if poly.contains(dict(zip(vars_, pt))):
+            return False
+    return True
+
+
+def test_simple_nonempty():
+    p = Polyhedron([ge(v("x"), 0), le(v("x"), 5)])
+    assert not p.is_empty()
+    assert p.find_integer_point() is not None
+
+
+def test_simple_empty():
+    p = Polyhedron([ge(v("x"), 3), le(v("x"), 2)])
+    assert p.is_rationally_empty()
+    assert p.is_empty()
+
+
+def test_integer_gap():
+    # 2x == 1 has a rational solution but no integer one; the gcd-tightening
+    # in row normalization already proves integer emptiness at the FM level
+    p = Polyhedron([eq(LinExpr({"x": 2}), 1), ge(v("x"), -10), le(v("x"), 10)])
+    assert p.is_empty()
+
+
+def test_equality_propagation():
+    p = Polyhedron([eq(v("y"), v("x") + 3), ge(v("x"), 0), le(v("x"), 4),
+                    ge(v("y"), 6)])
+    pt = p.find_integer_point()
+    assert pt is not None and pt["y"] == pt["x"] + 3 and pt["y"] >= 6
+
+
+@st.composite
+def small_polyhedra(draw):
+    nvars = draw(st.integers(1, 3))
+    vars_ = [f"x{i}" for i in range(nvars)]
+    cons = []
+    for var in vars_:                      # keep everything bounded
+        lo = draw(st.integers(-4, 2))
+        cons.append(ge(v(var), lo))
+        cons.append(le(v(var), lo + draw(st.integers(0, 6))))
+    for _ in range(draw(st.integers(0, 3))):
+        coeffs = {var: draw(st.integers(-3, 3)) for var in vars_}
+        const = draw(st.integers(-6, 6))
+        cons.append(ge(LinExpr(coeffs, const), 0))
+    return Polyhedron(cons)
+
+
+@given(small_polyhedra())
+@settings(max_examples=40, deadline=None)
+def test_emptiness_matches_bruteforce(poly):
+    assert poly.is_empty() == brute_force_empty(poly, bound=12)
+
+
+def test_enumerate_points():
+    p = Polyhedron([ge(v("x"), 0), le(v("x"), 3), ge(v("y"), v("x")),
+                    le(v("y"), 3)])
+    pts = p.enumerate_points()
+    assert len(pts) == 10  # triangle x<=y in 4x4

@@ -1,0 +1,54 @@
+"""The loop-aware HLO cost walker (the dry-run profiler)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_stats
+
+
+def compile_scan(L):
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y.sum()
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((L, 64, 64), jnp.float32)
+    return jax.jit(f).lower(x, w).compile()
+
+
+def test_trip_count_scaling():
+    """Unlike XLA's cost_analysis, flops must scale with scan length."""
+    s4 = hlo_stats.analyze(compile_scan(4).as_text())
+    s16 = hlo_stats.analyze(compile_scan(16).as_text())
+    dots = 2 * 64 ** 3
+    assert 4 * dots <= s4.flops <= 4 * dots * 1.2
+    assert 16 * dots <= s16.flops <= 16 * dots * 1.2
+    assert any(t == 4 for _, t in s4.loops)
+    assert any(t == 16 for _, t in s16.loops)
+
+
+def test_xla_cost_analysis_undercounts():
+    """Documents WHY the walker exists."""
+    c4, c16 = compile_scan(4), compile_scan(16)
+    assert c4.cost_analysis()["flops"] == c16.cost_analysis()["flops"]
+
+
+def test_collective_group_size_parsing():
+    assert hlo_stats._group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+    assert hlo_stats._group_size("replica_groups=[2,8]<=[16]") == 8
+    assert hlo_stats._group_size("") == 2
+
+
+def test_dot_flops_shapes():
+    txt = """
+HloModule m, entry_computation_layout={(f32[8,16]{1,0},f32[16,32]{1,0})->f32[8,32]{1,0}}
+
+ENTRY %main.1 (a: f32[8,16], b: f32[16,32]) -> f32[8,32] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %b = f32[16,32]{1,0} parameter(1)
+  ROOT %dot.1 = f32[8,32]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    st = hlo_stats.analyze(txt)
+    assert st.flops == 2 * 8 * 16 * 32

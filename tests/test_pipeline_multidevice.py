@@ -1,0 +1,58 @@
+"""Pipeline runtime on a real multi-device (host) mesh — subprocess because
+the device count must be set before jax initializes."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+from repro.comm.pipeline import pipeline_loss_fn
+
+mesh = jax.make_mesh((4,), ("pipe",), axis_types=(jax.sharding.AxisType.Auto,))
+S, D, M, mb = 4, 16, 8, 4
+
+def stage_fn(p, h):
+    return jnp.tanh(h @ p["w"] + p["b"])
+
+def loss_head(h, tgt):
+    return jnp.mean((h - tgt) ** 2)
+
+rng = jax.random.PRNGKey(0)
+params = {"w": 0.5 * jax.random.normal(rng, (S, D, D)), "b": jnp.zeros((S, D))}
+xs = jax.random.normal(rng, (M, mb, D))
+tg = jax.random.normal(jax.random.PRNGKey(1), (M, mb, D))
+
+def ref_loss(params, xs, tg):
+    def one(mb_x, mb_t):
+        h = mb_x
+        for s in range(S):
+            h = stage_fn({"w": params["w"][s], "b": params["b"][s]}, h)
+        return loss_head(h, mb_t)
+    return jnp.mean(jax.vmap(one)(xs, tg))
+
+want = float(ref_loss(params, xs, tg))
+for fifo in (True, False):
+    f = pipeline_loss_fn(stage_fn, loss_head, mesh, "pipe", fifo=fifo)
+    with jax.set_mesh(mesh):
+        got = float(jax.jit(f)(params, xs, tg))
+        g = jax.jit(jax.grad(f))(params, xs, tg)
+    assert abs(got - want) < 1e-5, (fifo, got, want)
+    gn = float(jnp.sqrt(sum(jnp.sum(x * x) for x in jax.tree.leaves(g))))
+    assert gn > 0
+print("PIPELINE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_pipeline_matches_reference_on_4_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=420)
+    assert "PIPELINE_OK" in out.stdout, out.stdout + out.stderr

@@ -1,0 +1,55 @@
+"""Logical-axis rule engine: divisibility fallback + no duplicated mesh axes."""
+import numpy as np
+import jax
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ParallelConfig
+from repro.models.sharding import Rules
+
+
+def mesh11():
+    return Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+
+
+def test_spec_basics():
+    rules = Rules.make(mesh11(), ParallelConfig())
+    # with axis size 1 everything divides
+    assert rules.spec((16, 32), ("wfsdp", "wtp")) == P("data", "model")
+    assert rules.spec((16,), ("norm",)) == P(None)
+
+
+def test_divisibility_fallback(monkeypatch):
+    rules = Rules.make(mesh11(), ParallelConfig())
+    # pretend the mesh is 16×16 for divisibility checks
+    rules.mesh = type("M", (), {"shape": {"data": 16, "model": 16}})()
+    assert rules.spec((9, 64), ("heads", None)) == P(None, None)
+    assert rules.dropped and rules.dropped[0][0] == "heads"
+    assert rules.spec((128, 64), ("heads", None)) == P("model", None)
+
+
+def test_no_axis_reuse():
+    rules = Rules.make(mesh11(), ParallelConfig(fsdp_axes=("data", "model"),
+                                                tp_axes=("model",)))
+    rules.mesh = type("M", (), {"shape": {"data": 16, "model": 16}})()
+    spec = rules.spec((256, 256), ("wfsdp", "wtp"))
+    # model claimed by dim0 (fsdp tuple) must not repeat on dim1
+    flat = []
+    for part in spec:
+        if part is None:
+            continue
+        flat.extend(part if isinstance(part, tuple) else [part])
+    assert len(flat) == len(set(flat))
+
+
+def test_multi_pod_parallel_defaults():
+    from repro import configs
+    b = configs.get("llama3-405b")
+    p1 = b.parallel_for("train_4k", multi_pod=False)
+    p2 = b.parallel_for("train_4k", multi_pod=True)
+    assert "pod" not in p1.batch_axes
+    assert p2.batch_axes[0] == "pod"
+    assert p2.fsdp_axes[0] == "pod"
+    # smollm: batch already data×model → pod goes to fsdp only
+    s = configs.get("smollm-135m").parallel_for("train_4k", multi_pod=True)
+    assert "pod" in s.fsdp_axes and "pod" not in s.batch_axes

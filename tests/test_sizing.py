@@ -1,0 +1,43 @@
+"""Channel sizing: Fig. 3(d) — depth-1 ≈ N, depth-2 ≈ b1, in-tile ≈ b2."""
+from repro.core.patterns import classify_channel
+from repro.core.polybench import jacobi_1d_paper
+from repro.core.ppn import PPN
+from repro.core.sizing import channel_capacity, pow2_size
+from repro.core.split import fifoize
+
+
+def test_fig3d_fifo_depth_sizes():
+    N, T, b1, b2 = 16, 8, 4, 4
+    case = jacobi_1d_paper(N=N, T=T, b1=b1, b2=b2)
+    ppn, rep = fifoize(PPN.from_kernel(case.kernel, tilings=case.tilings))
+    # dependence 5 is a[t-1,i] -> a[t,i]: ref index 1 of compute
+    by_depth = {c.depth: channel_capacity(ppn, c) for c in ppn.channels
+                if c.producer == "compute" and c.consumer == "compute"
+                and c.ref == 1}
+    assert set(by_depth) == {1, 2, 3}
+    assert N - 2 <= by_depth[1] <= N + 2          # crosses t-hyperplane: ~N
+    assert by_depth[2] <= b1 + 1                  # crosses t+i: ~b1
+    assert by_depth[3] <= b2 + 1                  # in-tile: ~b2
+
+
+def test_pow2():
+    assert pow2_size(0) == 0
+    assert pow2_size(1) == 1
+    assert pow2_size(3) == 4
+    assert pow2_size(16) == 16
+    assert pow2_size(17) == 32
+
+
+def test_piecewise_sizing_comparable():
+    """Table 1: split channels use ~the same storage (Δ ∈ [-44%, +7%] in the
+    paper; ours lands in the same band — tiny +1-slot effects included)."""
+    from repro.core.polybench import get
+    from repro.core.sizing import size_channels
+    case = get("gemm")
+    ppn = PPN.from_kernel(case.kernel, tilings=case.tilings)
+    ppn2, _ = fifoize(ppn)
+    b_tot = sum(pow2_size(channel_capacity(ppn, c)) for c in ppn.channels
+                if c.producer == "upd" and c.consumer == "upd")
+    a_tot = sum(pow2_size(channel_capacity(ppn2, c)) for c in ppn2.channels
+                if c.producer == "upd" and c.consumer == "upd")
+    assert a_tot <= 1.2 * b_tot + 2

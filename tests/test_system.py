@@ -1,0 +1,63 @@
+"""End-to-end behaviour tests: the paper's full pipeline (kernel → PPN →
+classify → FIFOIZE → sizing) and the framework quickstart path."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core.patterns import Pattern, classify_channel
+from repro.core.polybench import get, jacobi_1d_paper
+from repro.core.ppn import PPN
+from repro.core.sizing import size_channels
+from repro.core.split import fifoize
+
+
+def test_paper_end_to_end():
+    """The complete paper story on the motivating kernel: build PPN, tile,
+    observe broken FIFOs, recover them, and account for the storage."""
+    case = jacobi_1d_paper(N=16, T=8, b1=4, b2=4)
+    untiled = PPN.from_kernel(case.kernel)
+    assert all(classify_channel(untiled, c) is Pattern.FIFO
+               for c in untiled.channels)
+
+    tiled = PPN.from_kernel(case.kernel, tilings=case.tilings)
+    broken_before = sum(classify_channel(tiled, c) is not Pattern.FIFO
+                        for c in tiled.channels)
+    assert broken_before == 3
+
+    recovered, rep = fifoize(tiled)
+    assert all(classify_channel(recovered, c) is Pattern.FIFO
+               for c in recovered.channels)
+
+    sizes = size_channels(recovered, pow2=True)
+    total = sum(sizes.values())
+    base = sum(size_channels(tiled, pow2=True).values())
+    assert total <= 1.5 * base + 64        # "a few additional storage"
+
+
+def test_quickstart_trains():
+    """The examples/quickstart.py path: a ~100M-family model (reduced) trains
+    for a few steps and the loss moves."""
+    from repro import configs
+    from repro.configs.base import reduced
+    from repro.models import build
+    from repro.models.sharding import Rules
+    from repro.train.step import init_train_state, make_train_step
+
+    mesh = Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+    bundle = configs.get("smollm-135m")
+    cfg = reduced(bundle.model)
+    par = bundle.parallel_for("train_4k", False).replace(num_microbatches=2)
+    model = build(cfg, par)
+    rules = Rules.make(mesh, par)
+    bundle_t = make_train_step(model, rules, lr=5e-3)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(bundle_t.step_fn, donate_argnums=(0,))
+    losses = []
+    with mesh:
+        for i in range(8):
+            toks = jax.random.randint(jax.random.PRNGKey(100), (4, 64), 0,
+                                      cfg.vocab_size)
+            state, metrics = step(state, {"tokens": toks})
+            losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0]          # same batch → loss must drop

@@ -1,0 +1,103 @@
+"""Fault-tolerant training loop: convergence smoke, crash replay, optimizer."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh
+
+from repro import configs
+from repro.configs.base import reduced
+from repro.models import build
+from repro.models.sharding import Rules
+from repro.optim import adamw_init, adamw_update
+from repro.optim.quantized import dequantize_array, quantize_array
+from repro.train.loop import train
+
+MESH = Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+
+
+def _model(arch="smollm-135m"):
+    bundle = configs.get(arch)
+    cfg = reduced(bundle.model)
+    par = bundle.parallel_for("train_4k", False).replace(num_microbatches=2)
+    model = build(cfg, par)
+    return model, Rules.make(MESH, par)
+
+
+def test_loss_decreases(tmp_path):
+    model, rules = _model()
+    with MESH:
+        rep = train(model, rules, steps=100, ckpt_dir=str(tmp_path), lr=2e-2,
+                    ckpt_every=1000)
+    assert rep.steps_run == 100
+    # uniform synthetic tokens: the learnable margin is init-noise → ln(V)
+    # (6.30 → 6.24); demand a consistent decrease toward the entropy floor
+    assert np.mean(rep.losses[-10:]) < np.mean(rep.losses[:10]) - 0.03
+
+
+def test_crash_replay_resumes(tmp_path):
+    model, rules = _model()
+    with MESH:
+        rep = train(model, rules, steps=12, ckpt_dir=str(tmp_path), lr=1e-3,
+                    ckpt_every=5, fail_at=7)
+    # injected fault at step 7 → restore from ckpt 5 and replay to 12
+    assert rep.steps_run == 12
+    assert np.isfinite(rep.final_loss)
+
+
+def test_resume_from_checkpoint_continues(tmp_path):
+    model, rules = _model()
+    with MESH:
+        train(model, rules, steps=6, ckpt_dir=str(tmp_path), ckpt_every=3)
+        rep2 = train(model, rules, steps=4, ckpt_dir=str(tmp_path),
+                     ckpt_every=100)
+    assert rep2.restored_from == 6
+
+
+def test_int8_quantize_roundtrip():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(7, 300)).astype(np.float32))
+    q = quantize_array(x)
+    back = dequantize_array(q, x.shape)
+    err = np.max(np.abs(np.asarray(back) - np.asarray(x)))
+    assert err <= np.max(np.abs(np.asarray(x))) / 127 + 1e-6
+
+
+@pytest.mark.parametrize("state_dtype", ["float32", "int8"])
+def test_adamw_step_moves_params(state_dtype):
+    params = {"w": jnp.ones((4, 300)), "b": jnp.zeros((3,))}
+    grads = {"w": jnp.full((4, 300), 0.1), "b": jnp.full((3,), -0.2)}
+    opt = adamw_init(params, state_dtype)
+    new_p, new_opt, gnorm = adamw_update(params, grads, opt, 1e-2,
+                                         state_dtype=state_dtype)
+    assert float(gnorm) > 0
+    assert not np.allclose(np.asarray(new_p["w"]), np.asarray(params["w"]))
+    assert int(new_opt["step"]) == 1
+
+
+def test_chunked_update_matches_unchunked():
+    """The lax.map-chunked optimizer path must equal the direct path."""
+    rng = np.random.default_rng(1)
+    big = jnp.asarray(rng.normal(size=(4, 64, 17000)).astype(np.float32))
+    grads = jnp.asarray(rng.normal(size=big.shape).astype(np.float32)) * 0.01
+    p1, p2 = {"w": big}, {"w": big}
+    o1, o2 = adamw_init(p1), adamw_init(p2)
+    n1, _, _ = adamw_update(p1, {"w": grads}, o1, 1e-3,
+                            chunk_threshold=1 << 20)
+    # force the unchunked path via a reshaped view (leading dim 1)
+    p2r = {"w": big.reshape(1, -1)}
+    o2r = adamw_init(p2r)
+    n2, _, _ = adamw_update(p2r, {"w": grads.reshape(1, -1)}, o2r, 1e-3)
+    np.testing.assert_allclose(np.asarray(n1["w"]).ravel(),
+                               np.asarray(n2["w"]).ravel(), atol=1e-6)
+
+
+def test_watchdog_and_preemption():
+    from repro.train.ft import PreemptionGuard, StepWatchdog
+    wd = StepWatchdog(threshold=2.0)
+    assert not wd.observe(0, 1.0)
+    assert not wd.observe(1, 1.1)
+    assert wd.observe(2, 5.0)            # straggler
+    assert wd.stragglers == [2]
+    g = PreemptionGuard(signals=())
+    assert not g.should_exit
