@@ -1,0 +1,52 @@
+"""CI smoke benchmark: table2 on a 3-kernel subset with a regression guard.
+
+    PYTHONPATH=src python -m benchmarks.ci_smoke
+
+Checks, for gemm / jacobi-1d / seidel-2d:
+  * classifications match the recorded BENCH_table2.json seed rows exactly
+    (FIFO/split counts are the paper's results — any drift is a correctness
+    regression);
+  * wall-clock stays within GUARD_FACTOR of the recorded optimized timings
+    (generous to absorb CI machine variance, tight enough to catch the
+    analysis falling back off the vectorized path).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from . import table2_fifo
+
+KERNELS = ("gemm", "jacobi-1d", "seidel-2d")
+GUARD_FACTOR = 4.0
+
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_table2.json"
+
+
+def main() -> int:
+    doc = json.loads(BENCH_PATH.read_text())
+    recorded = {r["kernel"]: r for r in doc["optimized"]}
+    failures = []
+    for name in KERNELS:
+        got = min((table2_fifo.run_kernel(name) for _ in range(2)),
+                  key=lambda r: r["seconds"])
+        want = recorded[name]
+        drop = lambda r: {k: v for k, v in r.items() if k != "seconds"}
+        if drop(got) != drop(want):
+            failures.append(f"{name}: classification drift {drop(got)} "
+                            f"!= {drop(want)}")
+        budget = want["seconds"] * GUARD_FACTOR
+        status = "ok" if got["seconds"] <= budget else "SLOW"
+        print(f"{name:12s} {got['seconds']*1e3:7.1f}ms "
+              f"(budget {budget*1e3:7.1f}ms) {status}")
+        if got["seconds"] > budget:
+            failures.append(f"{name}: {got['seconds']:.3f}s exceeds "
+                            f"{budget:.3f}s timing budget")
+    for f in failures:
+        print("FAIL:", f, file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

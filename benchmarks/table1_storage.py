@@ -4,10 +4,10 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
-from repro.core.patterns import Pattern, classify_channel
+from repro.core.patterns import Pattern
 from repro.core.polybench import get, kernel_names
 from repro.core.ppn import PPN
-from repro.core.sizing import size_channels
+from repro.core.sizing import SizingContext, size_channels
 from repro.core.split import fifoize
 
 
@@ -18,8 +18,9 @@ def run_kernel(name: str) -> Dict:
     ppn2, rep = fifoize(ppn)
     # size-fifo-fail: channels that were split (non-FIFO before); compare the
     # original channel's storage vs the sum of its FIFO pieces (paper Table 1)
-    before_sizes = size_channels(ppn, pow2=True)
-    after_sizes = size_channels(ppn2, pow2=True)
+    szctx = SizingContext(ppn)
+    before_sizes = size_channels(ppn, pow2=True, context=szctx)
+    after_sizes = size_channels(ppn2, pow2=True, context=szctx)
     split_set = set(rep.split_ok)
     size_fail = sum(v for k, v in before_sizes.items() if k in split_set)
     size_split = sum(v for k, v in after_sizes.items()

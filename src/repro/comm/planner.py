@@ -24,7 +24,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core.patterns import Pattern, classify_edges
+from ..core.patterns import (ChannelClassifier, Pattern, classify_channels,
+                             classify_edges)
 from ..core.ppn import PPN, Channel, Process
 from ..core.schedule import AffineSchedule
 from ..core.sizing import channel_capacity, pow2_size
@@ -133,9 +134,10 @@ def analyze_pipeline(spec: PipelineSpec) -> Tuple[PPN, List[ChannelPlan]]:
     for name, p in list(ppn.processes.items()):
         ppn.processes[name] = _PipeProcess(
             spec, p.name, p.dims, p.schedule, p.pts, p.tiling, p.stmt_rank)
+    clf = ChannelClassifier(ppn)
     plans: List[ChannelPlan] = []
     for ch in ppn.channels:
-        plans.append(_plan_channel(ppn, ch))
+        plans.append(_plan_channel(ppn, ch, clf))
     return ppn, plans
 
 
@@ -170,7 +172,8 @@ def sp_halo_ppn(spec: SPHaloSpec) -> PPN:
 
 def analyze_sp_halo(spec: SPHaloSpec) -> Tuple[PPN, List[ChannelPlan]]:
     ppn = sp_halo_ppn(spec)
-    return ppn, [_plan_channel(ppn, ch) for ch in ppn.channels]
+    clf = ChannelClassifier(ppn)
+    return ppn, [_plan_channel(ppn, ch, clf) for ch in ppn.channels]
 
 
 # ================================================================ shared bits
@@ -188,12 +191,11 @@ def _tick_capacity(ppn: PPN, ch: Channel) -> int:
     w = prod.stmt_rank + prod.local_ts(ch.src_pts, ppn.params)[:, -1]
     r = cons.stmt_rank + cons.local_ts(ch.dst_pts, ppn.params)[:, -1]
     r = np.maximum(r, w + 1)
-    events = sorted([(t, +1) for t in w] + [(t, -1) for t in r])
-    occ = peak = 0
-    for _, d in events:
-        occ += d
-        peak = max(peak, occ)
-    return peak
+    t = np.concatenate([w, r])
+    d = np.concatenate([np.ones(len(w), dtype=np.int64),
+                        -np.ones(len(r), dtype=np.int64)])
+    occupancy = np.cumsum(d[np.lexsort((d, t))])   # reads drain before writes
+    return int(max(0, occupancy.max()))
 
 
 def split_by_tile_pair(ppn: PPN, ch: Channel) -> List[Channel]:
@@ -220,8 +222,11 @@ def split_by_tile_pair(ppn: PPN, ch: Channel) -> List[Channel]:
     return parts
 
 
-def _plan_channel(ppn: PPN, ch: Channel) -> ChannelPlan:
-    before = classify_pattern(ppn, ch)
+def _plan_channel(ppn: PPN, ch: Channel,
+                  clf: Optional[ChannelClassifier] = None) -> ChannelPlan:
+    if clf is None:
+        clf = ChannelClassifier(ppn)
+    before = classify_pattern(ppn, ch, clf)
     if before is Pattern.FIFO:
         cap = _tick_capacity(ppn, ch)
         return ChannelPlan(ch.name, before.value, False,
@@ -230,7 +235,7 @@ def _plan_channel(ppn: PPN, ch: Channel) -> ChannelPlan:
     # 1) the paper's depth split
     try:
         parts = split_channel(ppn, ch)
-        classified = [(p.depth, classify_pattern(ppn, p),
+        classified = [(p.depth, classify_pattern(ppn, p, clf),
                        pow2_size(_tick_capacity(ppn, p))) for p in parts]
         if all(pat is Pattern.FIFO for _, pat, _ in classified):
             return ChannelPlan(
@@ -242,7 +247,7 @@ def _plan_channel(ppn: PPN, ch: Channel) -> ChannelPlan:
     # 2) beyond-paper: per-tile-pair split (interleaved consumers)
     try:
         parts = split_by_tile_pair(ppn, ch)
-        classified = [(p.depth, classify_pattern(ppn, p),
+        classified = [(p.depth, classify_pattern(ppn, p, clf),
                        pow2_size(_tick_capacity(ppn, p))) for p in parts]
         if all(pat is Pattern.FIFO for _, pat, _ in classified):
             return ChannelPlan(
@@ -259,7 +264,10 @@ def _plan_channel(ppn: PPN, ch: Channel) -> ChannelPlan:
                        pow2_size(cap))
 
 
-def classify_pattern(ppn: PPN, ch: Channel) -> Pattern:
+def classify_pattern(ppn: PPN, ch: Channel,
+                     clf: Optional[ChannelClassifier] = None) -> Pattern:
+    if clf is not None:
+        return clf.classify(ch)
     prod = ppn.processes[ch.producer]
     cons = ppn.processes[ch.consumer]
     src_ts = prod.local_ts(ch.src_pts, ppn.params)

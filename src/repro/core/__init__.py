@@ -9,26 +9,31 @@ Public API:
     sizing                          — channel capacity + pow2 heuristic
     polybench                       — the paper's 15-kernel benchmark suite
 """
-from .affine import Constraint, LinExpr, eq, ge, gt, le, lt, v
+from .affine import Constraint, LinExpr, ceil_div, eq, floor_div, ge, gt, le, lt, v
 from .dataflow import Access, DepEdges, Kernel, Statement, direct_dependences
-from .patterns import (Pattern, ProcSpace, classify_channel, classify_edges,
-                       classify_symbolic, in_order_symbolic, unicity_symbolic)
-from .polyhedron import Polyhedron
-from .ppn import PPN, Channel, Process
+from .patterns import (ChannelClassifier, Pattern, ProcSpace, classify_channel,
+                       classify_channels, classify_edges, classify_symbolic,
+                       in_order_symbolic, unicity_symbolic)
+from .polyhedron import (Polyhedron, clear_polyhedron_cache,
+                         polyhedron_cache_stats)
+from .ppn import PPN, Channel, DomainIndex, Process
 from .relation import Relation
 from .schedule import AffineSchedule
-from .sizing import channel_capacity, pow2_size, size_channels
+from .sizing import (SizingContext, channel_capacity, pow2_size,
+                     size_channels)
 from .split import (FifoizeReport, NotApplicable, fifoize, fifoize_relation,
                     split_channel, split_covers, split_relation)
 from .tiling import Tiling, rectangular
 
 __all__ = [
-    "Access", "AffineSchedule", "Channel", "Constraint", "DepEdges",
-    "FifoizeReport", "Kernel", "LinExpr", "NotApplicable", "PPN", "Pattern",
-    "Polyhedron", "ProcSpace", "Process", "Relation", "Statement", "Tiling",
-    "channel_capacity", "classify_channel", "classify_edges",
-    "classify_symbolic", "direct_dependences", "eq", "fifoize",
-    "fifoize_relation", "ge", "gt", "in_order_symbolic", "le", "lt",
+    "Access", "AffineSchedule", "Channel", "ChannelClassifier", "Constraint",
+    "DepEdges", "DomainIndex", "FifoizeReport", "Kernel", "LinExpr",
+    "NotApplicable", "PPN", "Pattern", "Polyhedron", "ProcSpace", "Process",
+    "Relation", "SizingContext", "Statement", "Tiling", "ceil_div",
+    "channel_capacity", "classify_channel", "classify_channels",
+    "classify_edges", "classify_symbolic", "clear_polyhedron_cache",
+    "direct_dependences", "eq", "fifoize", "fifoize_relation", "floor_div",
+    "ge", "gt", "in_order_symbolic", "le", "lt", "polyhedron_cache_stats",
     "pow2_size", "rectangular", "size_channels", "split_channel",
     "split_covers", "split_relation", "unicity_symbolic", "v",
 ]

@@ -12,6 +12,16 @@ from dataclasses import dataclass, field
 from typing import Dict, Iterable, Mapping, Sequence, Tuple
 
 
+def ceil_div(a: int, b: int) -> int:
+    """Exact ``ceil(a / b)`` for integers, b > 0 (no float rounding)."""
+    return -((-a) // b)
+
+
+def floor_div(a: int, b: int) -> int:
+    """Exact ``floor(a / b)`` for integers, b > 0 (no float rounding)."""
+    return a // b
+
+
 class LinExpr:
     """Integer-coefficient affine expression ``sum_i c_i * v_i + const``."""
 
@@ -94,7 +104,7 @@ class LinExpr:
         if g <= 1:
             return self
         return LinExpr({v: c // g for v, c in self.coeffs.items()},
-                       math.floor(self.const / g))
+                       floor_div(self.const, g))
 
     def __eq__(self, other) -> bool:
         if not isinstance(other, LinExpr):

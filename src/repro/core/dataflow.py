@@ -122,13 +122,21 @@ class DepEdges:
 
 def direct_dependences(kernel: Kernel, params: Optional[Mapping[str, int]] = None
                        ) -> List[DepEdges]:
-    """Exact direct dependences by abstract execution in schedule order."""
+    """Exact direct dependences by abstract execution in schedule order.
+
+    Vectorized: every access instance is assigned its position in the global
+    schedule order; per (array, index-arity) group the cells are interned with
+    ``np.unique`` and each read is matched to the latest write of the same
+    cell at a strictly earlier position via one ``searchsorted``.  A read at
+    the same position as a write (the instance reading its own operand before
+    writing its result) matches the *previous* writer, exactly as the
+    schedule-order abstract interpretation did.
+    """
     params = dict(kernel.params, **(params or {}))
 
     # Enumerate all instances + global timestamps (padded to equal length).
     all_pts: List[np.ndarray] = []
     all_ts: List[np.ndarray] = []
-    stmt_of: List[int] = []
     max_len = max(len(s.schedule) for s in kernel.statements)
     for si, s in enumerate(kernel.statements):
         pts = enumerate_domain(s, params)
@@ -139,49 +147,83 @@ def direct_dependences(kernel: Kernel, params: Optional[Mapping[str, int]] = Non
             ts = np.concatenate([ts, pad], axis=1)
         all_pts.append(pts)
         all_ts.append(ts)
-        stmt_of.extend([si] * len(pts))
 
     ts_cat = np.concatenate(all_ts, axis=0)
     order = np.lexsort(ts_cat.T[::-1])
-    stmt_of_arr = np.array(stmt_of)
-    local_idx = np.concatenate([np.arange(len(p)) for p in all_pts])
+    pos = np.empty(len(ts_cat), dtype=np.int64)
+    pos[order] = np.arange(len(ts_cat))
+    base = np.cumsum([0] + [len(p) for p in all_pts])[:-1]
 
-    # Precompute index values for each access of each statement.
-    acc_vals: Dict[Tuple[int, str, int], np.ndarray] = {}
+    # Gather write/read access instances per (array, index arity).
+    groups: Dict[Tuple[str, int], Dict[str, list]] = {}
     for si, s in enumerate(kernel.statements):
-        for ri, acc in enumerate(s.reads):
-            acc_vals[(si, "r", ri)] = eval_exprs(acc.fn, s.dims, all_pts[si], params)
+        n_i = len(all_pts[si])
+        gpos = pos[base[si]:base[si] + n_i]
+        li = np.arange(n_i)
         for wi, acc in enumerate(s.writes):
-            acc_vals[(si, "w", wi)] = eval_exprs(acc.fn, s.dims, all_pts[si], params)
-
-    last_writer: Dict[Tuple[str, Tuple[int, ...]], Tuple[int, int]] = {}
-    edges: Dict[Tuple[int, int, int], Tuple[List[int], List[int], str]] = {}
-
-    for gi in order:
-        si = int(stmt_of_arr[gi])
-        li = int(local_idx[gi])
-        s = kernel.statements[si]
-        # reads first (a statement reads its operands, then writes its result)
+            cells = eval_exprs(acc.fn, s.dims, all_pts[si], params)
+            g = groups.setdefault((acc.array, cells.shape[1]),
+                                  {"w": [], "r": []})
+            g["w"].append((cells, gpos, si, li, wi))
         for ri, acc in enumerate(s.reads):
-            cell = (acc.array, tuple(int(x) for x in acc_vals[(si, "r", ri)][li]))
-            w = last_writer.get(cell)
-            if w is None:
-                continue                         # external input, no producer
-            key = (w[0], si, ri)
-            bucket = edges.setdefault(key, ([], [], acc.array))
-            bucket[0].append(w[1])
-            bucket[1].append(li)
-        for wi, acc in enumerate(s.writes):
-            cell = (acc.array, tuple(int(x) for x in acc_vals[(si, "w", wi)][li]))
-            last_writer[cell] = (si, li)
+            cells = eval_exprs(acc.fn, s.dims, all_pts[si], params)
+            g = groups.setdefault((acc.array, cells.shape[1]),
+                                  {"w": [], "r": []})
+            g["r"].append((cells, gpos, si, li, ri))
+
+    edges: Dict[Tuple[int, int, int], Tuple[np.ndarray, np.ndarray, str]] = {}
+    n_inst = len(ts_cat)
+    for (arr, _arity), g in groups.items():
+        if not g["w"] or not g["r"]:
+            continue
+        wc = np.concatenate([w[0] for w in g["w"]], axis=0)
+        wpos = np.concatenate([np.asarray(w[1]) for w in g["w"]])
+        wsi = np.concatenate([np.full(len(w[0]), w[2]) for w in g["w"]])
+        wli = np.concatenate([w[3] for w in g["w"]])
+        wwi = np.concatenate([np.full(len(w[0]), w[4]) for w in g["w"]])
+        rc = np.concatenate([r[0] for r in g["r"]], axis=0)
+        rpos = np.concatenate([np.asarray(r[1]) for r in g["r"]])
+        rsi = np.concatenate([np.full(len(r[0]), r[2]) for r in g["r"]])
+        rli = np.concatenate([r[3] for r in g["r"]])
+        rri = np.concatenate([np.full(len(r[0]), r[4]) for r in g["r"]])
+
+        _, cid = np.unique(np.concatenate([wc, rc], axis=0), axis=0,
+                           return_inverse=True)
+        wcid, rcid = cid[:len(wc)], cid[len(wc):]
+        # composite (cell, position) key; positions are < n_inst
+        wkey = wcid.astype(np.int64) * n_inst + wpos
+        rkey = rcid.astype(np.int64) * n_inst + rpos
+        worder = np.lexsort((wwi, wkey))
+        wkey_sorted = wkey[worder]
+        # rightmost write with key < read key == the read's last-writer;
+        # ties on (cell, pos) resolve to the instance's last write (max wi).
+        match = np.searchsorted(wkey_sorted, rkey, side="left") - 1
+        valid = match >= 0
+        midx = worder[np.clip(match, 0, None)]
+        valid &= wcid[midx] == rcid
+        if not bool(valid.any()):
+            continue
+        midx, p_si = midx[valid], wsi[midx[valid]]
+        c_si, c_ri = rsi[valid], rri[valid]
+        p_li, c_li, r_at = wli[midx], rli[valid], rpos[valid]
+        bucket_keys = np.stack([p_si, c_si, c_ri], axis=1)
+        uniq, inv = np.unique(bucket_keys, axis=0, return_inverse=True)
+        for b, (pi, ci, ri) in enumerate(uniq):
+            sel = inv == b
+            # edges ordered by consumer schedule position, as the abstract
+            # execution appended them
+            by_pos = np.argsort(r_at[sel], kind="stable")
+            edges[(int(pi), int(ci), int(ri))] = (
+                p_li[sel][by_pos], c_li[sel][by_pos], arr)
 
     out: List[DepEdges] = []
-    for (pi, ci, ri), (srcs, dsts, arr) in sorted(edges.items()):
+    for (pi, ci, ri) in sorted(edges):
+        srcs, dsts, arr = edges[(pi, ci, ri)]
         out.append(DepEdges(
             producer=kernel.statements[pi].name,
             consumer=kernel.statements[ci].name,
             ref=ri, array=arr,
-            src_pts=all_pts[pi][np.array(srcs)],
-            dst_pts=all_pts[ci][np.array(dsts)],
+            src_pts=all_pts[pi][srcs],
+            dst_pts=all_pts[ci][dsts],
         ))
     return out

@@ -11,6 +11,15 @@ polyhedra (solvable by LP).  We implement:
 * bounded enumeration used by the oracle backend and the sizing pass.
 
 Everything is exact integer arithmetic.
+
+The heavy operations (normalization, FM pos/neg/rest partitioning and pair
+combination) run on a dense ``(n_rows × n_vars+1)`` int64 constraint matrix
+(last column = constant) instead of per-row coefficient dicts; when a
+combination could overflow int64 the matrix transparently widens to exact
+Python-int (object dtype) arithmetic.  Emptiness verdicts are memoized on the
+canonical form of the system (sorted variables, gcd-tightened, row-dominance
+reduced, lexicographically sorted rows) so the classifier's many
+near-identical violation systems are solved once.
 """
 from __future__ import annotations
 
@@ -18,10 +27,178 @@ import itertools
 import math
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
-from .affine import Constraint, LinExpr
+import numpy as np
+
+from .affine import Constraint, LinExpr, ceil_div, floor_div
 
 # A row is an inequality  sum(coeffs[v]*v) + const >= 0, stored as LinExpr.
 Row = LinExpr
+
+# int64 combination safety margin: |a*b + c*d| must stay below 2^63.
+_INT64_SAFE = 1 << 62
+
+# ------------------------------------------------------------------- memo ----
+# Canonical-form verdict caches.  Keys derive from the *content* of a system
+# (variables + normalized matrix bytes), so mutating a Polyhedron after a
+# cached query cannot return a stale verdict — the key changes with it.
+_EMPTY_MEMO: Dict[object, bool] = {}
+_POINT_MEMO: Dict[object, Optional[Dict[str, int]]] = {}
+_MEMO_LIMIT = 1 << 17
+_MEMO_STATS = {"hits": 0, "misses": 0}
+
+
+def clear_polyhedron_cache() -> None:
+    _EMPTY_MEMO.clear()
+    _POINT_MEMO.clear()
+    _MEMO_STATS["hits"] = 0
+    _MEMO_STATS["misses"] = 0
+
+
+def polyhedron_cache_stats() -> Dict[str, int]:
+    return dict(_MEMO_STATS,
+                empty_entries=len(_EMPTY_MEMO),
+                point_entries=len(_POINT_MEMO))
+
+
+def _memo_get(memo: Dict, key):
+    got = memo.get(key, _memo_get)
+    if got is not _memo_get:
+        _MEMO_STATS["hits"] += 1
+        return True, got
+    _MEMO_STATS["misses"] += 1
+    return False, None
+
+
+def _memo_put(memo: Dict, key, value):
+    if len(memo) >= _MEMO_LIMIT:
+        memo.clear()
+    memo[key] = value
+
+
+# ---------------------------------------------------------- matrix helpers ---
+
+def _rows_to_matrix(rows: Sequence[Row]) -> Tuple[Tuple[str, ...], np.ndarray]:
+    """Dense ``(n_rows × n_vars+1)`` constraint matrix (last column const).
+
+    Variables are interned in first-appearance order.  Values exceeding the
+    int64 combination-safety margin force the exact object-dtype fallback.
+    """
+    index: Dict[str, int] = {}
+    for r in rows:
+        for name in r.coeffs:
+            if name not in index:
+                index[name] = len(index)
+    nv = len(index)
+    data = [[0] * (nv + 1) for _ in rows]
+    big = False
+    for i, r in enumerate(rows):
+        row = data[i]
+        for name, c in r.coeffs.items():
+            row[index[name]] = c
+            big = big or abs(c) >= _INT64_SAFE
+        row[nv] = r.const
+        big = big or abs(r.const) >= _INT64_SAFE
+    dtype = object if big else np.int64
+    mat = np.array(data, dtype=dtype)
+    if mat.size == 0:
+        mat = mat.reshape(len(rows), nv + 1)
+    return tuple(index), mat
+
+
+def _matrix_to_rows(variables: Sequence[str], mat: np.ndarray) -> List[Row]:
+    out: List[Row] = []
+    for row in mat:
+        coeffs = {v: int(c) for v, c in zip(variables, row[:-1]) if c != 0}
+        out.append(LinExpr(coeffs, int(row[-1])))
+    return out
+
+
+def _row_gcds(coeffs: np.ndarray) -> np.ndarray:
+    """Per-row gcd of |coefficients| (0 for all-zero rows)."""
+    if coeffs.dtype == object:
+        return np.array([math.gcd(*[abs(int(c)) for c in row]) if len(row)
+                         else 0 for row in coeffs], dtype=object)
+    if coeffs.shape[1] == 0:
+        return np.zeros(coeffs.shape[0], dtype=np.int64)
+    return np.gcd.reduce(np.abs(coeffs), axis=1)
+
+
+def _lexsort_rows(mat: np.ndarray) -> np.ndarray:
+    """Row order sorting by (coeff₀, coeff₁, …, const) ascending."""
+    if mat.dtype == object:
+        return np.array(sorted(range(mat.shape[0]),
+                               key=lambda i: tuple(int(x) for x in mat[i])),
+                        dtype=np.intp)
+    # np.lexsort: last key is primary ⇒ feed columns right-to-left.
+    return np.lexsort(mat[:, ::-1].T)
+
+
+def _normalize_matrix(mat: np.ndarray) -> Optional[np.ndarray]:
+    """Vectorized normalization: gcd-tighten each row, drop trivial rows,
+    eliminate syntactically dominated rows (same coefficient vector ⇒ keep
+    only the tightest constant), and sort rows canonically.
+
+    Returns None if a trivially unsatisfiable row (0 ≥ -c, c > 0) is found.
+    """
+    if mat.shape[0] == 0:
+        return mat
+    coeffs = mat[:, :-1]
+    g = _row_gcds(coeffs)
+    zero = g == 0
+    if bool(np.any(zero)):
+        if bool(np.any(mat[zero, -1] < 0)):
+            return None                   # "c >= 0" with c < 0: empty
+        mat = mat[~zero]
+        g = g[~zero]
+        if mat.shape[0] == 0:
+            return mat
+    tighten = g > 1
+    if bool(np.any(tighten)):
+        mat = mat.copy()
+        mat[tighten, :-1] //= g[tighten, None]
+        # integer tightening of the constant: g·x + c ≥ 0 ⇔ x + ⌊c/g⌋ ≥ 0
+        mat[tighten, -1] = np.floor_divide(mat[tighten, -1], g[tighten])
+    order = _lexsort_rows(mat)
+    mat = mat[order]
+    # dominance: rows sharing a coefficient vector are sorted by const
+    # ascending, and the smallest const is the tightest bound — keep it only.
+    if mat.shape[0] > 1:
+        distinct = np.any(mat[1:, :-1] != mat[:-1, :-1], axis=1)
+        keep = np.concatenate([[True], distinct])
+        mat = mat[keep]
+    return mat
+
+
+def _fm_eliminate_matrix(mat: np.ndarray, col: int) -> Optional[np.ndarray]:
+    """Eliminate variable ``col`` (rational projection) on the matrix form."""
+    c = mat[:, col]
+    pos_mask = c > 0
+    neg_mask = c < 0
+    pos = mat[pos_mask]
+    neg = mat[neg_mask]
+    rest = mat[~pos_mask & ~neg_mask]
+    if pos.shape[0] and neg.shape[0]:
+        if mat.dtype != object:
+            # |comb| ≤ max|pos|·max(cn) + max|neg|·max(cp): widen when unsafe.
+            bound = (int(np.abs(pos).max()) * int((-neg[:, col]).max())
+                     + int(np.abs(neg).max()) * int(pos[:, col].max()))
+            if bound >= _INT64_SAFE:
+                pos, neg, rest = (pos.astype(object), neg.astype(object),
+                                  rest.astype(object))
+        cp = pos[:, col]
+        cn = -neg[:, col]
+        comb = (pos[:, None, :] * cn[None, :, None]
+                + neg[None, :, :] * cp[:, None, None])
+        comb = comb.reshape(-1, mat.shape[1])
+        rest = np.concatenate([rest, comb], axis=0)
+    return _normalize_matrix(rest)
+
+
+def _elimination_order(mat: np.ndarray) -> List[int]:
+    """Columns ordered by occupancy (fewest mentioning rows first)."""
+    occupancy = (mat[:, :-1] != 0).sum(axis=0)
+    return [int(j) for j in np.argsort(occupancy, kind="stable")
+            if occupancy[j] > 0]
 
 
 class Polyhedron:
@@ -79,6 +256,35 @@ class Polyhedron:
     def contains(self, env: Mapping[str, int]) -> bool:
         return all(r.eval(env) >= 0 for r in self.rows)
 
+    # ------------------------------------------------------------ matrix form
+    def to_matrix(self) -> Tuple[Tuple[str, ...], np.ndarray]:
+        """(variables, constraint matrix) — last column is the constant."""
+        return _rows_to_matrix(self.rows)
+
+    @staticmethod
+    def from_matrix(variables: Sequence[str], mat: np.ndarray) -> "Polyhedron":
+        p = Polyhedron()
+        p.rows = _matrix_to_rows(variables, mat)
+        return p
+
+    def _canonical(self) -> Tuple[Tuple[str, ...], Optional[np.ndarray]]:
+        """Canonical (sorted-variable, normalized, row-sorted) form; the
+        matrix is None when the system is trivially empty."""
+        variables, mat = self.to_matrix()
+        if variables:
+            perm = sorted(range(len(variables)), key=lambda i: variables[i])
+            variables = tuple(variables[i] for i in perm)
+            mat = mat[:, perm + [len(perm)]]
+        return variables, _normalize_matrix(mat)
+
+    @staticmethod
+    def _memo_key(variables: Tuple[str, ...], mat: np.ndarray):
+        if mat.dtype == object:
+            body = tuple(tuple(int(x) for x in row) for row in mat)
+        else:
+            body = (mat.shape, mat.tobytes())
+        return variables, body
+
     # --------------------------------------------------------- normalization
     @staticmethod
     def _normalize_rows(rows: List[Row]) -> Optional[List[Row]]:
@@ -99,54 +305,47 @@ class Polyhedron:
         return list(out.values())
 
     # ---------------------------------------------------- Fourier–Motzkin
-    @staticmethod
-    def _fm_eliminate(rows: List[Row], var: str) -> Optional[List[Row]]:
-        """Eliminate ``var`` (rational projection). None ⇒ empty detected."""
-        pos, neg, rest = [], [], []
-        for r in rows:
-            c = r.coeffs.get(var, 0)
-            if c > 0:
-                pos.append(r)
-            elif c < 0:
-                neg.append(r)
-            else:
-                rest.append(r)
-        for rp in pos:
-            cp = rp.coeffs[var]
-            for rn in neg:
-                cn = -rn.coeffs[var]
-                # cp*x >= -(rest of rp);  cn*x <= (rest of rn)
-                comb = rp * cn + rn * cp     # var coefficient cancels
-                assert comb.coeffs.get(var, 0) == 0
-                rest.append(comb)
-        return Polyhedron._normalize_rows(rest)
-
     def project_out(self, variables: Sequence[str]) -> Optional["Polyhedron"]:
-        rows = Polyhedron._normalize_rows(self.rows)
-        if rows is None:
+        names, mat = self.to_matrix()
+        mat = _normalize_matrix(mat)
+        if mat is None:
             return None
+        col_of = {v: j for j, v in enumerate(names)}
         for var in variables:
-            rows = Polyhedron._fm_eliminate(rows, var)
-            if rows is None:
+            if var not in col_of:
+                continue
+            mat = _fm_eliminate_matrix(mat, col_of[var])
+            if mat is None:
                 return None
-        p = Polyhedron()
-        p.rows = rows
-        return p
+        drop = set(variables)
+        keep = [v for v in names if v not in drop]
+        keep_cols = [col_of[v] for v in keep] + [len(names)]
+        return Polyhedron.from_matrix(keep, mat[:, keep_cols])
 
     def is_rationally_empty(self) -> bool:
         """Exact emptiness over Q (FM is complete over the rationals)."""
-        rows = Polyhedron._normalize_rows(self.rows)
-        if rows is None:
+        variables, mat = self._canonical()
+        if mat is None:
             return True
-        variables = sorted({v for r in rows for v in r.coeffs},
-                           key=lambda v: sum(1 for r in rows if v in r.coeffs))
-        for var in variables:
-            rows = Polyhedron._fm_eliminate(rows, var)
-            if rows is None:
-                return True
-            if len(rows) > 4000:      # FM blow-up guard; fall back conservative
-                return False
-        return False
+        return Polyhedron._rationally_empty_canonical(variables, mat)
+
+    @staticmethod
+    def _rationally_empty_canonical(variables: Tuple[str, ...],
+                                    mat: np.ndarray) -> bool:
+        key = Polyhedron._memo_key(variables, mat)
+        hit, cached = _memo_get(_EMPTY_MEMO, key)
+        if hit:
+            return cached
+        result = False
+        for col in _elimination_order(mat):
+            mat = _fm_eliminate_matrix(mat, col)
+            if mat is None:
+                result = True
+                break
+            if mat.shape[0] > 4000:   # FM blow-up guard; fall back conservative
+                break
+        _memo_put(_EMPTY_MEMO, key, result)
+        return result
 
     # --------------------------------------------------------- integer search
     def _var_bounds(self, rows: List[Row], var: str) -> Tuple[Optional[int], Optional[int]]:
@@ -160,10 +359,10 @@ class Polyhedron:
                 continue
             # c*var + const >= 0
             if c > 0:
-                b = -(-(-r.const) // c) if False else math.ceil(-r.const / c)
+                b = ceil_div(-r.const, c)
                 lo = b if lo is None else max(lo, b)
             else:
-                b = math.floor(r.const / (-c))
+                b = floor_div(r.const, -c)
                 hi = b if hi is None else min(hi, b)
         return lo, hi
 
@@ -178,11 +377,24 @@ class Polyhedron:
         tile coordinates collapse to single-value windows as soon as their
         defining variables are set, so the search degenerates to enumerating
         only the genuinely free dimensions."""
-        rows = Polyhedron._normalize_rows(self.rows)
-        if rows is None:
+        cvars, cmat = self._canonical()
+        if cmat is None:
             return None
+        return Polyhedron._find_integer_point_canonical(cvars, cmat, max_nodes,
+                                                        default_radius)
+
+    @staticmethod
+    def _find_integer_point_canonical(cvars: Tuple[str, ...], cmat: np.ndarray,
+                                      max_nodes: int, default_radius: int
+                                      ) -> Optional[Dict[str, int]]:
+        memo_key = (Polyhedron._memo_key(cvars, cmat), max_nodes, default_radius)
+        hit, cached = _memo_get(_POINT_MEMO, memo_key)
+        if hit:
+            return dict(cached) if cached is not None else None
+        rows = _matrix_to_rows(cvars, cmat)
         variables = list({v: None for r in rows for v in r.coeffs})
         if not variables:
+            _memo_put(_POINT_MEMO, memo_key, {})
             return {}
 
         budget = [max_nodes]
@@ -208,10 +420,10 @@ class Polyhedron:
                     continue
                 # c*var + acc >= 0
                 if c > 0:
-                    b = math.ceil(-acc / c)
+                    b = ceil_div(-acc, c)
                     lo = b if lo is None else max(lo, b)
                 else:
-                    b = math.floor(acc / (-c))
+                    b = floor_div(acc, -c)
                     hi = b if hi is None else min(hi, b)
                 if lo is not None and hi is not None and lo > hi:
                     return None
@@ -250,7 +462,10 @@ class Polyhedron:
                     return None
             return None
 
-        return dfs({})
+        found = dfs({})
+        _memo_put(_POINT_MEMO, memo_key,
+                  dict(found) if found is not None else None)
+        return found
 
     def is_empty(self, max_nodes: int = 20000) -> bool:
         """Integer emptiness: rationally empty ⇒ empty; otherwise try to
@@ -259,9 +474,13 @@ class Polyhedron:
         by the classifier the guided search is exhaustive within the FM
         bounds, so this is exact in practice (cross-validated against the
         enumeration oracle in tests)."""
-        if self.is_rationally_empty():
+        variables, mat = self._canonical()       # canonicalize once, use twice
+        if mat is None:
             return True
-        return self.find_integer_point(max_nodes=max_nodes) is None
+        if Polyhedron._rationally_empty_canonical(variables, mat):
+            return True
+        return Polyhedron._find_integer_point_canonical(
+            variables, mat, max_nodes, 64) is None
 
     # ------------------------------------------------------------ enumeration
     def bounding_box(self) -> Dict[str, Tuple[int, int]]:

@@ -18,6 +18,59 @@ from .schedule import AffineSchedule
 from .tiling import Tiling
 
 
+class DomainIndex:
+    """Vectorized lookup from integer points to their row in a domain array.
+
+    Points are encoded to a single scalar by mixed-radix packing over the
+    domain's bounding box (falls back to a bytes-keyed dict when the box is
+    too large to pack into int64).  Channels built from a process domain can
+    then map their edge endpoints to domain rows in O(E log N) numpy ops
+    instead of per-edge Python hashing.
+    """
+
+    def __init__(self, pts: np.ndarray):
+        self.pts = pts
+        n, d = pts.shape
+        self._packed = False
+        if n and d:
+            lo = pts.min(axis=0).astype(np.int64)
+            extents = pts.max(axis=0).astype(np.int64) - lo + 1
+            total = 1
+            for e in extents.tolist():
+                total *= int(e)
+            if total < (1 << 62):
+                strides = np.ones(d, dtype=np.int64)
+                for j in range(d - 2, -1, -1):
+                    strides[j] = strides[j + 1] * extents[j + 1]
+                self._lo, self._strides, self._extents = lo, strides, extents
+                codes = (pts - lo) @ strides
+                self._order = np.argsort(codes, kind="stable")
+                self._codes = codes[self._order]
+                self._packed = True
+        if not self._packed:
+            self._map = {row.tobytes(): i
+                         for i, row in enumerate(np.ascontiguousarray(pts))}
+
+    def rows_of(self, pts: np.ndarray) -> np.ndarray:
+        """Domain row index of each point; raises if a point is absent."""
+        if pts.shape[0] == 0:
+            return np.zeros(0, dtype=np.intp)
+        if not self._packed:
+            contig = np.ascontiguousarray(pts)
+            return np.array([self._map[row.tobytes()] for row in contig],
+                            dtype=np.intp)
+        # out-of-box points can alias in-box codes — reject them first
+        shifted = pts - self._lo
+        if not bool(np.all((shifted >= 0) & (shifted < self._extents))):
+            raise KeyError("point not in domain")
+        codes = shifted @ self._strides
+        slot = np.searchsorted(self._codes, codes)
+        slot = np.clip(slot, 0, len(self._codes) - 1)
+        if not bool(np.all(self._codes[slot] == codes)):
+            raise KeyError("point not in domain")
+        return self._order[slot]
+
+
 @dataclass
 class Process:
     name: str
@@ -27,6 +80,13 @@ class Process:
     tiling: Optional[Tiling] = None
     stmt_rank: int = 0                       # position in original program text
     global_sched: Optional[AffineSchedule] = None   # original 2d+1 timestamp
+
+    def domain_index(self) -> DomainIndex:
+        idx = self.__dict__.get("_domain_index")
+        if idx is None or idx.pts is not self.pts:
+            idx = DomainIndex(self.pts)
+            self.__dict__["_domain_index"] = idx
+        return idx
 
     def local_ts(self, pts: np.ndarray, params: Mapping[str, int]) -> np.ndarray:
         """Timestamps under the (possibly tiled) local schedule: (φ…, base…)."""

@@ -7,67 +7,95 @@ that respects the channel's blocking semantics needs at most this for FIFO
 channels).  The paper's heuristic then rounds the capacity to a power of two;
 splitting produces lower-dimensional pieces for which the bound is tighter —
 occasionally *reducing* total storage (gemm in Table 1), which we reproduce.
+
+The occupancy sweep is fully vectorized: global timestamps and their lex
+ranks are computed once per process (shared across channels via
+``SizingContext``), the per-value last read is a grouped argmax over ranks,
+and the event sweep is a lexsort + cumulative sum.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Mapping, Tuple
+from typing import Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
+from .patterns import _lex_rank
 from .ppn import PPN, Channel
 
-
-def _global_ts(ppn: PPN, proc_name: str, pts: np.ndarray) -> np.ndarray:
-    """Global timestamp: (tile coords…, original 2d+1 schedule) — statements
-    interleave inside each tile as in the original program (the paper's tiled
-    execution), so loop-carried cross-statement channels size correctly."""
-    return ppn.processes[proc_name].global_ts(pts, ppn.params)
+_NEG = -(10 ** 9)
 
 
-def channel_capacity(ppn: PPN, c: Channel) -> int:
+class SizingContext:
+    """Per-process global timestamps + lex ranks, computed once and shared by
+    every channel-capacity query (and across PPNs sharing Process objects)."""
+
+    def __init__(self, ppn: PPN):
+        self.ppn = ppn
+        self._proc: Dict[str, Tuple[object, object, np.ndarray, np.ndarray]] = {}
+
+    def _proc_data(self, name: str):
+        proc = self.ppn.processes[name]
+        cached = self._proc.get(name)
+        if cached is not None and cached[0] is proc:
+            return cached
+        gts = proc.global_ts(proc.pts, self.ppn.params)
+        cached = (proc, proc.domain_index(), gts, _lex_rank(gts))
+        self._proc[name] = cached
+        return cached
+
+    def ts_and_rank(self, proc_name: str, pts: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        _, index, gts, rank = self._proc_data(proc_name)
+        rows = index.rows_of(pts)
+        return gts[rows], rank[rows]
+
+
+def channel_capacity(ppn: PPN, c: Channel,
+                     context: Optional[SizingContext] = None) -> int:
     """Max #values in flight under the tiled sequential schedule."""
     if c.num_edges == 0:
         return 0
-    wts = _global_ts(ppn, c.producer, c.src_pts)
-    rts = _global_ts(ppn, c.consumer, c.dst_pts)
+    ctx = context if context is not None else SizingContext(ppn)
+    ctx.ppn = ppn
+    wts, _ = ctx.ts_and_rank(c.producer, c.src_pts)
+    rts, r_rank = ctx.ts_and_rank(c.consumer, c.dst_pts)
     width = max(wts.shape[1], rts.shape[1])
 
     def pad(ts: np.ndarray) -> np.ndarray:
         if ts.shape[1] < width:
             ts = np.concatenate(
-                [ts, np.full((len(ts), width - ts.shape[1]), -(10 ** 9),
+                [ts, np.full((len(ts), width - ts.shape[1]), _NEG,
                              dtype=np.int64)], axis=1)
         return ts
 
     wts, rts = pad(wts), pad(rts)
     # A value occupies the channel from its write to its LAST read
-    # (multiplicity keeps it live).  Deduplicate identical producer instances.
-    src_keys = np.unique(c.src_pts, axis=0, return_inverse=True)
-    uniq, inv = src_keys
-    n_vals = len(uniq)
-    write_ts = np.zeros((n_vals, width), dtype=np.int64)
-    last_read = np.full((n_vals, width), -(10 ** 9), dtype=np.int64)
-    for e in range(c.num_edges):
-        vid = inv[e]
-        write_ts[vid] = wts[e]
-        # lexicographic max of read timestamps
-        if _lex_le(last_read[vid], rts[e]):
-            last_read[vid] = rts[e]
+    # (multiplicity keeps it live).  Group edges by producer instance; the
+    # last read is the grouped lex-max, i.e. the max consumer rank (padding
+    # appends equal columns so ranks still order the padded rows).
+    _, inv = np.unique(c.src_pts, axis=0, return_inverse=True)
+    order = np.lexsort((r_rank, inv))
+    group_end = np.concatenate([inv[order][1:] != inv[order][:-1], [True]])
+    last_edge = order[group_end]              # one edge per value, max read
+    write_ts = wts[last_edge]                 # same write row for all edges
+    last_read = rts[last_edge]                # of a value ⇒ any representative
     # Sweep: +1 at write, -1 after last read.  Reads at a timestamp happen
     # before writes at the same timestamp (operand read precedes result write).
-    events: List[Tuple[Tuple[int, ...], int, int]] = []
-    for vid in range(n_vals):
-        events.append((tuple(write_ts[vid]), 1, +1))
-        events.append((tuple(last_read[vid]), 0, -1))
-    events.sort()
-    occ = peak = 0
-    for _, _, delta in events:
-        occ += delta
-        peak = max(peak, occ)
-    return peak
+    ev_ts = np.concatenate([write_ts, last_read], axis=0)
+    n_vals = len(last_edge)
+    tag = np.concatenate([np.ones(n_vals, dtype=np.int64),
+                          np.zeros(n_vals, dtype=np.int64)])
+    delta = np.concatenate([np.ones(n_vals, dtype=np.int64),
+                            -np.ones(n_vals, dtype=np.int64)])
+    keys = (tag,) + tuple(ev_ts[:, j] for j in range(width - 1, -1, -1))
+    ev_order = np.lexsort(keys)
+    occupancy = np.cumsum(delta[ev_order])
+    return int(max(0, occupancy.max()))
 
 
 def _lex_le(a: np.ndarray, b: np.ndarray) -> bool:
+    """Scalar lex compare — the reference-oracle comparator used by the
+    capacity cross-validation tests, not by the vectorized sweep."""
     for x, y in zip(a.tolist(), b.tolist()):
         if x < y:
             return True
@@ -83,9 +111,11 @@ def pow2_size(capacity: int) -> int:
     return 1 << (int(capacity - 1).bit_length())
 
 
-def size_channels(ppn: PPN, pow2: bool = False) -> Dict[str, int]:
+def size_channels(ppn: PPN, pow2: bool = False,
+                  context: Optional[SizingContext] = None) -> Dict[str, int]:
+    ctx = context if context is not None else SizingContext(ppn)
     out: Dict[str, int] = {}
     for c in ppn.channels:
-        cap = channel_capacity(ppn, c)
+        cap = channel_capacity(ppn, c, context=ctx)
         out[c.name] = pow2_size(cap) if pow2 else cap
     return out

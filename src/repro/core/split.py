@@ -23,7 +23,8 @@ from typing import Dict, Iterable, List, Mapping, Optional, Tuple
 import numpy as np
 
 from .affine import Constraint
-from .patterns import Pattern, ProcSpace, classify_channel, classify_symbolic
+from .patterns import (ChannelClassifier, Pattern, ProcSpace,
+                       classify_channels, classify_symbolic)
 from .ppn import PPN, Channel, Process
 from .relation import Relation
 from .schedule import lex_lt_at_depth, prefix_eq
@@ -78,14 +79,18 @@ class FifoizeReport:
     untouched: List[str]             # already-FIFO, untiled, or not applicable
 
 
-def fifoize(ppn: PPN) -> Tuple[PPN, FifoizeReport]:
+def fifoize(ppn: PPN, classifier: Optional[ChannelClassifier] = None
+            ) -> Tuple[PPN, FifoizeReport]:
     """FIFOIZE: returns the rewritten PPN + a report (non-destructive).
 
     Channels already classified FIFO are left alone (splitting them would
     only multiply channel count — cf. gesummv in Table 2, unchanged at 6
     channels); channels violating the shared-(φ,i)-schedule assumption are
-    skipped (paper line 6)."""
-    before = {c.name: classify_channel(ppn, c) for c in ppn.channels}
+    skipped (paper line 6).  Classification runs on the batched
+    per-process-rank path; pass an existing ``classifier`` to share its
+    per-process caches with surrounding analyses."""
+    clf = classifier if classifier is not None else ChannelClassifier(ppn)
+    before = classify_channels(ppn, classifier=clf)
     new_channels: List[Channel] = []
     ok: List[str] = []
     failed: List[str] = []
@@ -101,14 +106,14 @@ def fifoize(ppn: PPN) -> Tuple[PPN, FifoizeReport]:
             untouched.append(c.name)
             new_channels.append(c)
             continue
-        if all(classify_channel(ppn, p) is Pattern.FIFO for p in parts):
+        if all(clf.classify(p) is Pattern.FIFO for p in parts):
             ok.append(c.name)
             new_channels.extend(parts)
         else:
             failed.append(c.name)
             new_channels.append(c)
     out = PPN(ppn.kernel_name, ppn.params, ppn.processes, new_channels)
-    after = {c.name: classify_channel(out, c) for c in out.channels}
+    after = classify_channels(out, classifier=clf)
     return out, FifoizeReport(before, after, ok, failed, untouched)
 
 

@@ -1,6 +1,9 @@
 """Classifier: paper's motivating examples + enumeration↔symbolic agreement."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (AffineSchedule, Pattern, ProcSpace, Relation, Tiling,

@@ -1,0 +1,212 @@
+"""Cross-validation of the vectorized constraint-matrix polyhedral core.
+
+1. The batched rank-based classifier (``ChannelClassifier`` /
+   ``classify_channels``) must agree with the per-channel enumeration backend
+   (``classify_edges`` via ``classify_channel``) on every PolyBench kernel
+   channel, before and after FIFOIZE.
+2. The vectorized occupancy sweep (``channel_capacity``) must agree with a
+   straight reimplementation of the per-edge reference algorithm.
+3. matrix ↔ dict round-tripping preserves polyhedron semantics.
+4. The emptiness memo cache is keyed on content: mutating a polyhedron after
+   a cached query must reflect the new constraints (no stale verdicts).
+5. ``_var_bounds`` uses exact integer ceil/floor division (floats mis-round
+   for large coefficients).
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (ChannelClassifier, Pattern, Polyhedron, SizingContext,
+                        classify_channel, classify_channels,
+                        clear_polyhedron_cache, eq, ge, le,
+                        polyhedron_cache_stats, v)
+from repro.core.affine import LinExpr, ceil_div, floor_div
+from repro.core.polybench import get, kernel_names
+from repro.core.ppn import PPN, DomainIndex
+from repro.core.sizing import _lex_le, channel_capacity
+from repro.core.split import fifoize
+
+
+# ------------------------------------------------ classification agreement --
+
+@pytest.mark.parametrize("name", kernel_names())
+def test_batched_classifier_matches_enumeration(name):
+    case = get(name)
+    ppn = PPN.from_kernel(case.kernel, tilings=case.tilings)
+    clf = ChannelClassifier(ppn)
+    for c in ppn.channels:
+        assert clf.classify(c) is classify_channel(ppn, c), c.name
+    ppn2, _ = fifoize(ppn)          # shares Process objects with ppn
+    batched = classify_channels(ppn2, classifier=clf)
+    for c in ppn2.channels:
+        assert batched[c.name] is classify_channel(ppn2, c), c.name
+
+
+# ----------------------------------------------------- capacity agreement ---
+
+def _reference_capacity(ppn, c):
+    """The original per-edge occupancy sweep, kept as the oracle."""
+    if c.num_edges == 0:
+        return 0
+    wts = ppn.processes[c.producer].global_ts(c.src_pts, ppn.params)
+    rts = ppn.processes[c.consumer].global_ts(c.dst_pts, ppn.params)
+    width = max(wts.shape[1], rts.shape[1])
+
+    def pad(ts):
+        if ts.shape[1] < width:
+            ts = np.concatenate(
+                [ts, np.full((len(ts), width - ts.shape[1]), -(10 ** 9),
+                             dtype=np.int64)], axis=1)
+        return ts
+
+    wts, rts = pad(wts), pad(rts)
+    uniq, inv = np.unique(c.src_pts, axis=0, return_inverse=True)
+    n_vals = len(uniq)
+    write_ts = np.zeros((n_vals, width), dtype=np.int64)
+    last_read = np.full((n_vals, width), -(10 ** 9), dtype=np.int64)
+    for e in range(c.num_edges):
+        vid = inv[e]
+        write_ts[vid] = wts[e]
+        if _lex_le(last_read[vid], rts[e]):
+            last_read[vid] = rts[e]
+    events = []
+    for vid in range(n_vals):
+        events.append((tuple(write_ts[vid]), 1, +1))
+        events.append((tuple(last_read[vid]), 0, -1))
+    events.sort()
+    occ = peak = 0
+    for _, _, delta in events:
+        occ += delta
+        peak = max(peak, occ)
+    return peak
+
+
+@pytest.mark.parametrize("name", ["gemm", "jacobi-1d", "seidel-2d", "atax"])
+def test_vectorized_capacity_matches_reference(name):
+    case = get(name)
+    ppn = PPN.from_kernel(case.kernel, tilings=case.tilings)
+    ppn2, _ = fifoize(ppn)
+    for p in (ppn, ppn2):
+        ctx = SizingContext(p)
+        for c in p.channels:
+            assert (channel_capacity(p, c, context=ctx)
+                    == _reference_capacity(p, c)), c.name
+
+
+# --------------------------------------------------- matrix ↔ dict round-trip
+
+def _random_poly(rng, n_rows=6, n_vars=3, lo=-9, hi=9):
+    names = [f"x{i}" for i in range(n_vars)]
+    p = Polyhedron()
+    for _ in range(n_rows):
+        coeffs = {n: rng.randint(lo, hi) for n in names}
+        p.rows.append(LinExpr(coeffs, rng.randint(-20, 20)))
+    return p, names
+
+
+def test_matrix_roundtrip_preserves_semantics():
+    rng = random.Random(1234)
+    for _ in range(50):
+        p, names = _random_poly(rng)
+        variables, mat = p.to_matrix()
+        q = Polyhedron.from_matrix(variables, mat)
+        for _ in range(20):
+            env = {n: rng.randint(-6, 6) for n in names}
+            assert p.contains(env) == q.contains(env)
+        assert p.is_rationally_empty() == q.is_rationally_empty()
+
+
+def test_matrix_roundtrip_exact_on_huge_coefficients():
+    big = 2 ** 80                    # far beyond int64: object-dtype fallback
+    p = Polyhedron([ge(LinExpr.var("x", big), big), le(v("x"), 3)])
+    variables, mat = p.to_matrix()
+    assert mat.dtype == object
+    q = Polyhedron.from_matrix(variables, mat)
+    assert q.contains({"x": 1}) and not q.contains({"x": 0})
+    assert not p.is_empty()          # x in [1, 3]
+    assert p.intersect([le(v("x"), 0)]).is_empty()
+
+
+# --------------------------------------------------------- memo-cache rules --
+
+def test_memo_cache_no_stale_verdicts_after_mutation():
+    clear_polyhedron_cache()
+    p = Polyhedron([ge(v("x"), 0), le(v("x"), 10)])
+    assert not p.is_empty()
+    p.add(ge(v("x"), 42))            # mutation changes the canonical key
+    assert p.is_empty()
+    p2 = Polyhedron([ge(v("x"), 0), le(v("x"), 10)])
+    assert not p2.is_empty()         # equal content hits the cached verdict
+    stats = polyhedron_cache_stats()
+    assert stats["hits"] >= 1 and stats["empty_entries"] >= 2
+
+
+def test_memo_cache_keyed_on_canonical_form():
+    clear_polyhedron_cache()
+    a = Polyhedron([ge(v("x"), 1), le(v("y"), 5)])
+    b = Polyhedron([le(v("y"), 5), ge(v("x"), 1)])      # same system, reordered
+    assert not a.is_rationally_empty()
+    before = polyhedron_cache_stats()["hits"]
+    assert not b.is_rationally_empty()
+    assert polyhedron_cache_stats()["hits"] == before + 1
+
+
+# ------------------------------------------------------ exact integer bounds
+
+def test_var_bounds_exact_for_large_coefficients():
+    # 3*x - (2**53 + 1) >= 0  ⇒  x >= ceil((2**53+1)/3); float division of
+    # 2**53+1 rounds to 2**53 and used to yield an off-by-one lower bound.
+    c = 2 ** 53 + 1
+    p = Polyhedron([ge(LinExpr.var("x", 3), c)])
+    lo, hi = p._var_bounds(p.rows, "x")
+    assert lo == ceil_div(c, 3) == (c + 2) // 3
+    assert hi is None
+    assert ceil_div(7, 2) == 4 and ceil_div(-7, 2) == -3
+    assert floor_div(7, 2) == 3 and floor_div(-7, 2) == -4
+
+
+# ------------------------------------------------- incremental symbolic path
+
+def test_symbolic_incremental_matches_paper_dep5():
+    """Paper Fig. 3: dep (1,0) of jacobi-1d is FIFO untiled, broken by the
+    skewed tiling, recovered by SPLIT — exercises the shared-prefix
+    early-exit path and the emptiness memo end to end."""
+    from repro.core import (AffineSchedule, ProcSpace, Relation, Tiling,
+                            classify_symbolic)
+    from repro.core.split import fifoize_relation
+
+    dom = [ge(v("t"), 1), le(v("t"), v("T")), ge(v("i"), 1), le(v("i"), v("N"))]
+    assume = [ge(v("N"), 8), ge(v("T"), 8), le(v("N"), 32), le(v("T"), 32)]
+    tiled = ProcSpace(("t", "i"), AffineSchedule.identity(("t", "i")),
+                      Tiling(((1, 0), (1, 1)), (4, 4)))
+    plain = ProcSpace(("t", "i"), AffineSchedule.identity(("t", "i")))
+    rel5 = Relation.uniform(("t", "i"), (1, 0), dom, dom, params=("N", "T"))
+    assert classify_symbolic(rel5, plain, plain, assume) is Pattern.FIFO
+    assert classify_symbolic(rel5, tiled, tiled, assume) is not Pattern.FIFO
+    parts = fifoize_relation(rel5, tiled, tiled, assume)
+    assert parts is not None and len(parts) == 3
+    assert all(p is Pattern.FIFO for _, _, p in parts)
+
+
+# ----------------------------------------------------------- domain index ---
+
+def test_domain_index_row_lookup():
+    rng = np.random.default_rng(7)
+    pts = np.unique(rng.integers(-50, 50, size=(200, 3)), axis=0)
+    idx = DomainIndex(pts)
+    perm = rng.permutation(len(pts))[:64]
+    assert np.array_equal(idx.rows_of(pts[perm]), perm)
+    with pytest.raises(KeyError):
+        idx.rows_of(np.array([[999, 999, 999]]))
+
+
+def test_domain_index_fallback_matches_packed():
+    pts = np.array([[0, 0], [0, 1], [2, 3], [5, 5]], dtype=np.int64)
+    packed = DomainIndex(pts)
+    fallback = DomainIndex(pts)
+    fallback._packed = False
+    fallback._map = {row.tobytes(): i
+                     for i, row in enumerate(np.ascontiguousarray(pts))}
+    query = pts[[3, 0, 2, 1]]
+    assert np.array_equal(packed.rows_of(query), fallback.rows_of(query))
