@@ -1,25 +1,50 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+#     python -m benchmarks.run            # full sweep (all tables)
+#     python -m benchmarks.run --smoke    # CI subset: 3-kernel table2 rows
+#                                         # via the Analysis driver + the
+#                                         # pipeline planner (fast, no jax)
 from __future__ import annotations
 
+import argparse
 import sys
+
+
+def _emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def smoke() -> None:
+    from . import pipeline_comm, table2_fifo
+
+    print("name,us_per_call,derived")
+    for kernel in ("gemm", "jacobi-1d", "seidel-2d"):
+        r = table2_fifo.run_kernel(kernel)
+        _emit(f"table2/{r['kernel']}", r["seconds"] * 1e6,
+              f"fifo {r['fifo_before']}/{r['channels_before']} -> "
+              f"{r['fifo_after']}/{r['channels_after']}")
+    pipeline_comm.main(_emit)
 
 
 def main() -> None:
     from . import (fig3_stencil, moe_capacity, pipeline_comm,
                    roofline_report, table1_storage, table2_fifo)
 
-    def emit(name: str, us: float, derived: str = "") -> None:
-        print(f"{name},{us:.1f},{derived}")
-        sys.stdout.flush()
-
     print("name,us_per_call,derived")
-    table2_fifo.main(emit)      # paper Table 2: FIFO recovery
-    table1_storage.main(emit)   # paper Table 1: storage impact
-    fig3_stencil.main(emit)     # Fig. 3: the FIFO stencil kernel on TPU terms
-    pipeline_comm.main(emit)    # the planner on pipeline/SP schedules
-    moe_capacity.main(emit)     # capacity-factor → drop-rate ablation
-    roofline_report.main(emit)  # §Roofline summary from the dry-run cache
+    table2_fifo.main(_emit)      # paper Table 2: FIFO recovery
+    table1_storage.main(_emit)   # paper Table 1: storage impact
+    fig3_stencil.main(_emit)     # Fig. 3: the FIFO stencil kernel on TPU terms
+    pipeline_comm.main(_emit)    # the planner on pipeline/SP schedules
+    moe_capacity.main(_emit)     # capacity-factor → drop-rate ablation
+    roofline_report.main(_emit)  # §Roofline summary from the dry-run cache
 
 
 if __name__ == '__main__':
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset exercising the public Analysis API")
+    if ap.parse_args().smoke:
+        smoke()
+    else:
+        main()

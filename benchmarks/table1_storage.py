@@ -1,26 +1,27 @@
-"""Paper Table 1 counterpart: storage impact of splitting (Δ column)."""
+"""Paper Table 1 counterpart: storage impact of splitting (Δ column).
+
+Runs on the staged `Analysis` driver: the pre- and post-FIFOIZE sizings
+share one `SizingContext` through the pipeline's `AnalysisContext`.
+"""
 from __future__ import annotations
 
 import time
 from typing import Dict, List
 
-from repro.core.patterns import Pattern
+from repro.core.analysis import analyze
 from repro.core.polybench import get, kernel_names
-from repro.core.ppn import PPN
-from repro.core.sizing import SizingContext, size_channels
-from repro.core.split import fifoize
 
 
 def run_kernel(name: str) -> Dict:
     case = get(name)
     t0 = time.perf_counter()
-    ppn = PPN.from_kernel(case.kernel, tilings=case.tilings)
-    ppn2, rep = fifoize(ppn)
+    base = analyze(case)
+    split = base.fifoize()
     # size-fifo-fail: channels that were split (non-FIFO before); compare the
     # original channel's storage vs the sum of its FIFO pieces (paper Table 1)
-    szctx = SizingContext(ppn)
-    before_sizes = size_channels(ppn, pow2=True, context=szctx)
-    after_sizes = size_channels(ppn2, pow2=True, context=szctx)
+    before_sizes = base.size(pow2=True).sizes
+    after_sizes = split.size(pow2=True).sizes
+    rep = split.fifoize_report
     split_set = set(rep.split_ok)
     size_fail = sum(v for k, v in before_sizes.items() if k in split_set)
     size_split = sum(v for k, v in after_sizes.items()

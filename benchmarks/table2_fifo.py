@@ -1,39 +1,41 @@
 """Paper Table 2 counterpart: FIFO detection before/after FIFOIZE, per
-PolyBench kernel (compute channels, as the paper counts)."""
+PolyBench kernel (compute channels, as the paper counts).
+
+Runs on the staged `Analysis` driver: one classifier + one sizing context
+per kernel, shared across the before/after sides (the rewritten PPN shares
+Process objects, so per-process timestamps/ranks are computed once).
+"""
 from __future__ import annotations
 
 import time
 from typing import Dict, List
 
-from repro.core.patterns import ChannelClassifier, Pattern, classify_channels
+from repro.core.analysis import Analysis, analyze
+from repro.core.patterns import Pattern
 from repro.core.polybench import get, kernel_names
-from repro.core.ppn import PPN
-from repro.core.sizing import SizingContext, pow2_size, size_channels
-from repro.core.split import fifoize
 
 
 def run_kernel(name: str) -> Dict:
     case = get(name)
     t0 = time.perf_counter()
-    ppn = PPN.from_kernel(case.kernel, tilings=case.tilings)
+    base = analyze(case).classify()
     comp = set(case.compute)
-    # one classifier + sizing context per kernel: the rewritten PPN shares
-    # Process objects, so per-process timestamps/ranks are computed once
-    clf = ChannelClassifier(ppn)
-    szctx = SizingContext(ppn)
 
-    def stats(p):
-        ch = [c for c in p.channels if c.producer in comp and c.consumer in comp]
-        cls_map = classify_channels(p, channels=ch, classifier=clf)
-        cls = [cls_map[c.name] for c in ch]
-        sizes = size_channels(p, pow2=True, context=szctx)
-        fifo_sz = sum(sizes[c.name] for c, k in zip(ch, cls) if k is Pattern.FIFO)
+    def stats(a: Analysis):
+        sized = a.size(pow2=True)
+        pats, sizes = sized.patterns, sized.sizes
+        ch = [c for c in a.ppn.channels
+              if c.producer in comp and c.consumer in comp]
+        cls = [pats[c.name] for c in ch]
+        fifo_sz = sum(sizes[c.name] for c, k in zip(ch, cls)
+                      if k is Pattern.FIFO)
         tot_sz = sum(sizes[c.name] for c in ch)
         return (len(ch), sum(k is Pattern.FIFO for k in cls), fifo_sz, tot_sz)
 
-    n0, f0, fs0, ts0 = stats(ppn)
-    ppn2, rep = fifoize(ppn, classifier=clf)
-    n2, f2, fs2, ts2 = stats(ppn2)
+    n0, f0, fs0, ts0 = stats(base)
+    split = base.fifoize()
+    rep = split.fifoize_report
+    n2, f2, fs2, ts2 = stats(split)
     elapsed = time.perf_counter() - t0
     return {
         "kernel": name,

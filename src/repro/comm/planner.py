@@ -19,33 +19,23 @@ Verdicts lower to JAX collectives (comm.channels):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core.patterns import (ChannelClassifier, Pattern, classify_channels,
-                             classify_edges)
+from ..core.analysis import ChannelPlan, analyze
+from ..core.deprecation import deprecated_shim
+from ..core.patterns import ChannelClassifier, Pattern, _classify_channel
 from ..core.ppn import PPN, Channel, Process
 from ..core.schedule import AffineSchedule
-from ..core.sizing import channel_capacity, pow2_size
-from ..core.split import NotApplicable, fifoize, split_channel
+from ..core.sizing import tick_capacity
+# re-exported for backward compatibility — these moved to the core
+from ..core.split import NotApplicable, split_by_tile_pair  # noqa: F401
 from ..core.tiling import Tiling
 from ..core import v
 
-
-@dataclass
-class ChannelPlan:
-    name: str
-    pattern_before: str
-    split: bool
-    parts: List[Tuple[int, str, int]]      # (depth, pattern, pow2 buffer size)
-    lowering: str                          # ppermute | ppermute+register | reorder-buffer
-    buffer_slots: int
-
-    @property
-    def is_cheap(self) -> bool:
-        return self.lowering.startswith("ppermute")
+_tick_capacity = tick_capacity                 # old private name, kept alive
 
 
 # =========================================================== pipeline model
@@ -130,15 +120,15 @@ class _PipeProcess(Process):
 
 
 def analyze_pipeline(spec: PipelineSpec) -> Tuple[PPN, List[ChannelPlan]]:
+    """Plan every channel of the pipeline PPN via the staged driver
+    (`analyze(...).plan('pipeline')`): tick capacities, depth- then
+    chunk-splitting, one shared classifier."""
     ppn = pipeline_ppn(spec)
     for name, p in list(ppn.processes.items()):
         ppn.processes[name] = _PipeProcess(
             spec, p.name, p.dims, p.schedule, p.pts, p.tiling, p.stmt_rank)
-    clf = ChannelClassifier(ppn)
-    plans: List[ChannelPlan] = []
-    for ch in ppn.channels:
-        plans.append(_plan_channel(ppn, ch, clf))
-    return ppn, plans
+    a = analyze(ppn).plan(topology="pipeline")
+    return ppn, list(a.plans)
 
 
 # ===================================================== sequence-parallel halo
@@ -172,108 +162,18 @@ def sp_halo_ppn(spec: SPHaloSpec) -> PPN:
 
 def analyze_sp_halo(spec: SPHaloSpec) -> Tuple[PPN, List[ChannelPlan]]:
     ppn = sp_halo_ppn(spec)
-    clf = ChannelClassifier(ppn)
-    return ppn, [_plan_channel(ppn, ch, clf) for ch in ppn.channels]
+    a = analyze(ppn).plan(topology="pipeline")
+    return ppn, list(a.plans)
 
 
 # ================================================================ shared bits
 
-def _tick_capacity(ppn: PPN, ch: Channel) -> int:
-    """Forward-streaming buffer bound: stages run in lockstep ticks
-    (tick = stage rank + local order); a value occupies the channel from its
-    producer tick to its consumer tick (min 1 tick).  This is the
-    double-buffer depth of the FIFO stream, not the paper's program-order
-    liveness (pipelines are self-timed)."""
-    if ch.num_edges == 0:
-        return 0
-    prod = ppn.processes[ch.producer]
-    cons = ppn.processes[ch.consumer]
-    w = prod.stmt_rank + prod.local_ts(ch.src_pts, ppn.params)[:, -1]
-    r = cons.stmt_rank + cons.local_ts(ch.dst_pts, ppn.params)[:, -1]
-    r = np.maximum(r, w + 1)
-    t = np.concatenate([w, r])
-    d = np.concatenate([np.ones(len(w), dtype=np.int64),
-                        -np.ones(len(r), dtype=np.int64)])
-    occupancy = np.cumsum(d[np.lexsort((d, t))])   # reads drain before writes
-    return int(max(0, occupancy.max()))
-
-
-def split_by_tile_pair(ppn: PPN, ch: Channel) -> List[Channel]:
-    """Beyond-paper extension: partition by (φ_producer, φ_consumer) VALUE
-    (not just crossing depth).  Needed when a process interleaves tiles
-    instead of executing them atomically (vpp chunk interleaving) — the
-    paper's ≈ⁿ part then still mixes tiles.  Recovers per-chunk FIFO
-    channels, i.e. derives Megatron's separate per-chunk send/recv streams
-    automatically."""
-    from dataclasses import replace as _replace
-    prod = ppn.processes[ch.producer]
-    cons = ppn.processes[ch.consumer]
-    if prod.tiling is None or cons.tiling is None:
-        raise NotApplicable(ch.name)
-    sphi = prod.tiling.tile_coords_of(ch.src_pts)
-    dphi = cons.tiling.tile_coords_of(ch.dst_pts)
-    keys = np.concatenate([sphi, dphi], axis=1)
-    uniq, inv = np.unique(keys, axis=0, return_inverse=True)
-    parts = []
-    for g in range(len(uniq)):
-        mask = inv == g
-        parts.append(_replace(ch, src_pts=ch.src_pts[mask],
-                              dst_pts=ch.dst_pts[mask], depth=g + 1))
-    return parts
-
-
-def _plan_channel(ppn: PPN, ch: Channel,
-                  clf: Optional[ChannelClassifier] = None) -> ChannelPlan:
-    if clf is None:
-        clf = ChannelClassifier(ppn)
-    before = classify_pattern(ppn, ch, clf)
-    if before is Pattern.FIFO:
-        cap = _tick_capacity(ppn, ch)
-        return ChannelPlan(ch.name, before.value, False,
-                           [(0, "fifo", pow2_size(cap))],
-                           "ppermute", pow2_size(cap))
-    # 1) the paper's depth split
-    try:
-        parts = split_channel(ppn, ch)
-        classified = [(p.depth, classify_pattern(ppn, p, clf),
-                       pow2_size(_tick_capacity(ppn, p))) for p in parts]
-        if all(pat is Pattern.FIFO for _, pat, _ in classified):
-            return ChannelPlan(
-                ch.name, before.value, True,
-                [(d, pat.value, sz) for d, pat, sz in classified],
-                "ppermute(depth-split)", sum(sz for _, _, sz in classified))
-    except NotApplicable:
-        pass
-    # 2) beyond-paper: per-tile-pair split (interleaved consumers)
-    try:
-        parts = split_by_tile_pair(ppn, ch)
-        classified = [(p.depth, classify_pattern(ppn, p, clf),
-                       pow2_size(_tick_capacity(ppn, p))) for p in parts]
-        if all(pat is Pattern.FIFO for _, pat, _ in classified):
-            return ChannelPlan(
-                ch.name, before.value, True,
-                [(d, pat.value, sz) for d, pat, sz in classified],
-                "ppermute(chunk-split)", sum(sz for _, _, sz in classified))
-    except NotApplicable:
-        pass
-    cap = _tick_capacity(ppn, ch)
-    lowering = ("ppermute+register" if before is Pattern.IN_ORDER_MULT
-                else "reorder-buffer")
-    return ChannelPlan(ch.name, before.value, False,
-                       [(0, before.value, pow2_size(cap))], lowering,
-                       pow2_size(cap))
-
-
+@deprecated_shim("analyze(ppn).classify()")
 def classify_pattern(ppn: PPN, ch: Channel,
                      clf: Optional[ChannelClassifier] = None) -> Pattern:
     if clf is not None:
         return clf.classify(ch)
-    prod = ppn.processes[ch.producer]
-    cons = ppn.processes[ch.consumer]
-    src_ts = prod.local_ts(ch.src_pts, ppn.params)
-    dst_ts = cons.local_ts(ch.dst_pts, ppn.params)
-    io, un = classify_edges(src_ts, dst_ts)
-    return Pattern.of(io, un)
+    return _classify_channel(ppn, ch)
 
 
 def plan_report(plans: List[ChannelPlan]) -> str:

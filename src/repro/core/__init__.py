@@ -10,7 +10,10 @@ Public API:
     polybench                       — the paper's 15-kernel benchmark suite
 """
 from .affine import Constraint, LinExpr, ceil_div, eq, floor_div, ge, gt, le, lt, v
+from .analysis import (Analysis, AnalysisContext, AnalysisReport, ChannelPlan,
+                       analyze)
 from .dataflow import Access, DepEdges, Kernel, Statement, direct_dependences
+from .deprecation import reset_deprecation_warnings
 from .patterns import (ChannelClassifier, Pattern, ProcSpace, classify_channel,
                        classify_channels, classify_edges, classify_symbolic,
                        in_order_symbolic, unicity_symbolic)
@@ -20,20 +23,23 @@ from .ppn import PPN, Channel, DomainIndex, Process
 from .relation import Relation
 from .schedule import AffineSchedule
 from .sizing import (SizingContext, channel_capacity, pow2_size,
-                     size_channels)
+                     size_channels, tick_capacity)
 from .split import (FifoizeReport, NotApplicable, fifoize, fifoize_relation,
-                    split_channel, split_covers, split_relation)
+                    split_by_tile_pair, split_channel, split_covers,
+                    split_relation)
 from .tiling import Tiling, rectangular
 
 __all__ = [
-    "Access", "AffineSchedule", "Channel", "ChannelClassifier", "Constraint",
-    "DepEdges", "DomainIndex", "FifoizeReport", "Kernel", "LinExpr",
-    "NotApplicable", "PPN", "Pattern", "Polyhedron", "ProcSpace", "Process",
-    "Relation", "SizingContext", "Statement", "Tiling", "ceil_div",
-    "channel_capacity", "classify_channel", "classify_channels",
+    "Access", "AffineSchedule", "Analysis", "AnalysisContext",
+    "AnalysisReport", "Channel", "ChannelClassifier", "ChannelPlan",
+    "Constraint", "DepEdges", "DomainIndex", "FifoizeReport", "Kernel",
+    "LinExpr", "NotApplicable", "PPN", "Pattern", "Polyhedron", "ProcSpace",
+    "Process", "Relation", "SizingContext", "Statement", "Tiling", "analyze",
+    "ceil_div", "channel_capacity", "classify_channel", "classify_channels",
     "classify_edges", "classify_symbolic", "clear_polyhedron_cache",
     "direct_dependences", "eq", "fifoize", "fifoize_relation", "floor_div",
     "ge", "gt", "in_order_symbolic", "le", "lt", "polyhedron_cache_stats",
-    "pow2_size", "rectangular", "size_channels", "split_channel",
-    "split_covers", "split_relation", "unicity_symbolic", "v",
+    "pow2_size", "rectangular", "reset_deprecation_warnings", "size_channels",
+    "split_by_tile_pair", "split_channel", "split_covers", "split_relation",
+    "tick_capacity", "unicity_symbolic", "v",
 ]

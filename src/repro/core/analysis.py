@@ -1,0 +1,325 @@
+"""Unified staged analysis driver — the paper's flow as one fluent API.
+
+    from repro.core import analyze
+
+    report = (analyze(case.kernel, tilings=case.tilings)
+              .classify()          # per-channel pattern (batched ranks)
+              .fifoize()           # SPLIT + FIFOIZE (paper Fig. 2)
+              .size(pow2=True)     # buffer capacities (paper §4)
+              .plan()              # lowering per channel (comm backend)
+              .report())           # JSON-serializable artifact
+
+Each stage returns a NEW immutable `Analysis`; all of them share one
+`AnalysisContext` carrying the memoized per-process machinery — the
+`ChannelClassifier` (local timestamps + lex ranks), the `SizingContext`
+(global timestamps + ranks) and the dataflow oracle's output (the PPN built
+once by `analyze`).  No stage ever rebuilds what a previous stage computed:
+the rewritten PPN after FIFOIZE shares `Process` objects with the original,
+so the same classifier/sizing caches serve both sides of every
+before/after comparison.  `report()` emits the `AnalysisReport` that the
+benchmarks (`table1_storage`, `table2_fifo`), the quickstart and CI consume.
+
+The old free functions (`classify_channel`, `classify_channels`,
+`size_channels`, `channel_capacity`, `fifoize`) remain as deprecated
+delegating shims — byte-identical results, just without stage sharing.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, replace
+from typing import Any, Dict, List, Mapping, Optional, Tuple, Union
+
+from .dataflow import Kernel
+from .patterns import ChannelClassifier, Pattern, _classify_channels
+from .polyhedron import polyhedron_cache_stats
+from .ppn import PPN, Channel
+from .sizing import (SizingContext, _channel_capacity, _size_channels,
+                     pow2_size, tick_capacity)
+from .split import (FifoizeReport, NotApplicable, _fifoize, split_by_tile_pair,
+                    split_channel)
+from .tiling import Tiling
+
+
+class AnalysisContext:
+    """Mutable memo shared by every `Analysis` in a pipeline: the classifier
+    and sizing context are built lazily, exactly once, and threaded through
+    all stages.  They key their per-process caches on `Process` identity, so
+    the FIFOIZE-rewritten PPN (which shares processes) reuses them as-is."""
+
+    def __init__(self) -> None:
+        self._classifier: Optional[ChannelClassifier] = None
+        self._sizing: Optional[SizingContext] = None
+        self.counters: Dict[str, int] = {
+            "classifier_builds": 0, "sizing_builds": 0,
+            "classify_stages": 0, "fifoize_stages": 0,
+            "size_stages": 0, "plan_stages": 0,
+        }
+
+    def classifier(self, ppn: PPN) -> ChannelClassifier:
+        if self._classifier is None:
+            self._classifier = ChannelClassifier(ppn)
+            self.counters["classifier_builds"] += 1
+        self._classifier.ppn = ppn
+        return self._classifier
+
+    def sizing(self, ppn: PPN) -> SizingContext:
+        if self._sizing is None:
+            self._sizing = SizingContext(ppn)
+            self.counters["sizing_builds"] += 1
+        self._sizing.ppn = ppn
+        return self._sizing
+
+
+@dataclass
+class ChannelPlan:
+    """Lowering decision for one channel (comm backend terms).
+
+    Lowerings (cheapest first, cf. comm/planner module docs):
+        ppermute                → FIFO neighbor stream, pow2 double buffer
+        ppermute(depth-split)   → paper SPLIT recovered all-FIFO parts
+        ppermute(chunk-split)   → beyond-paper per-tile-pair split succeeded
+        ppermute+register       → in-order but multicast (local broadcast)
+        reorder-buffer          → out-of-order; addressable buffer
+    """
+
+    name: str
+    pattern_before: str
+    split: bool
+    parts: List[Tuple[int, str, int]]      # (depth, pattern, pow2 buffer size)
+    lowering: str
+    buffer_slots: int
+
+    @property
+    def is_cheap(self) -> bool:
+        return self.lowering.startswith("ppermute")
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"name": self.name, "pattern_before": self.pattern_before,
+                "split": self.split,
+                "parts": [list(p) for p in self.parts],
+                "lowering": self.lowering, "buffer_slots": self.buffer_slots}
+
+
+@dataclass
+class AnalysisReport:
+    """The one JSON-serializable artifact of a pipeline run."""
+
+    kernel: str
+    params: Dict[str, int]
+    stages: List[str]
+    channels: List[Dict[str, Any]]    # name/depth/pattern before+after/slots
+    fifoize: Optional[Dict[str, List[str]]]
+    sizes_pow2: Optional[bool]
+    total_slots: Optional[int]
+    plans: Optional[List[Dict[str, Any]]]
+    cache: Dict[str, Any]
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "kernel": self.kernel, "params": dict(self.params),
+            "stages": list(self.stages), "channels": self.channels,
+            "fifoize": self.fifoize, "sizes_pow2": self.sizes_pow2,
+            "total_slots": self.total_slots, "plans": self.plans,
+            "cache": self.cache,
+        }
+
+    def to_json(self, **kwargs) -> str:
+        return json.dumps(self.as_dict(), **kwargs)
+
+    def summary(self) -> str:
+        n = len(self.channels)
+        fifo = sum(c["pattern_after"] == Pattern.FIFO.value
+                   for c in self.channels)
+        parts = [f"{self.kernel}: {fifo}/{n} FIFO"]
+        if self.fifoize is not None:
+            parts.append(f"split {len(self.fifoize['split_ok'])} ok / "
+                         f"{len(self.fifoize['split_failed'])} failed")
+        if self.total_slots is not None:
+            parts.append(f"{self.total_slots} buffer slots")
+        return ", ".join(parts)
+
+
+def _source_name(c: Channel) -> str:
+    """Name of the pre-SPLIT channel a (possibly split) channel came from."""
+    return c.name.rsplit("@", 1)[0] if c.depth is not None else c.name
+
+
+@dataclass(frozen=True)
+class Analysis:
+    """One immutable pipeline state.  Stage methods return a new `Analysis`
+    sharing this one's `AnalysisContext`; `parent` links the chain so
+    `report()` can show before/after without recomputing anything."""
+
+    ppn: PPN
+    ctx: AnalysisContext
+    stages: Tuple[str, ...] = ("ppn",)
+    parent: Optional["Analysis"] = None
+    patterns: Optional[Mapping[str, Pattern]] = None
+    fifoize_report: Optional[FifoizeReport] = None
+    sizes: Optional[Mapping[str, int]] = None
+    sizes_pow2: Optional[bool] = None
+    plans: Optional[Tuple[ChannelPlan, ...]] = None
+
+    # ------------------------------------------------------------- stages --
+
+    def _next(self, stage: str, **changes) -> "Analysis":
+        return replace(self, stages=self.stages + (stage,), parent=self,
+                       **changes)
+
+    def classify(self) -> "Analysis":
+        """Classify every channel on the shared batched-rank path."""
+        self.ctx.counters["classify_stages"] += 1
+        pats = _classify_channels(self.ppn,
+                                  classifier=self.ctx.classifier(self.ppn))
+        return self._next("classify", patterns=pats)
+
+    def fifoize(self) -> "Analysis":
+        """SPLIT + FIFOIZE (paper Fig. 2) on the shared classifier; the new
+        `Analysis` carries the rewritten PPN and its after-patterns."""
+        self.ctx.counters["fifoize_stages"] += 1
+        out, rep = _fifoize(self.ppn, classifier=self.ctx.classifier(self.ppn))
+        return self._next("fifoize", ppn=out, fifoize_report=rep,
+                          patterns=rep.after)
+
+    def size(self, pow2: bool = True) -> "Analysis":
+        """Channel capacities under the tiled sequential schedule (paper §4),
+        on the shared per-process global-timestamp caches."""
+        self.ctx.counters["size_stages"] += 1
+        sizes = _size_channels(self.ppn, pow2=pow2,
+                               context=self.ctx.sizing(self.ppn))
+        return self._next("size", sizes=sizes, sizes_pow2=pow2)
+
+    def plan(self, topology: str = "sequential") -> "Analysis":
+        """Pick a lowering per channel (comm backend).
+
+        topology='sequential' — the paper's setting: program-order occupancy
+        capacities, depth-SPLIT recovery only.
+        topology='pipeline' — self-timed distributed stages: lockstep tick
+        capacities and, beyond the paper, per-tile-pair (chunk) splitting for
+        interleaved consumers (vpp schedules).
+        """
+        if topology not in ("sequential", "pipeline"):
+            raise ValueError(f"unknown topology {topology!r}")
+        self.ctx.counters["plan_stages"] += 1
+        clf = self.ctx.classifier(self.ppn)
+        if topology == "pipeline":
+            cap = lambda ch: tick_capacity(self.ppn, ch)
+        else:
+            szctx = self.ctx.sizing(self.ppn)
+            cap = lambda ch: _channel_capacity(self.ppn, ch, context=szctx)
+        plans = tuple(
+            self._plan_channel(ch, clf, cap, chunk_split=topology == "pipeline")
+            for ch in self.ppn.channels)
+        return self._next("plan", plans=plans)
+
+    def _plan_channel(self, ch: Channel, clf: ChannelClassifier, cap,
+                      chunk_split: bool) -> ChannelPlan:
+        before = clf.classify(ch)
+        if before is Pattern.FIFO:
+            slots = pow2_size(cap(ch))
+            return ChannelPlan(ch.name, before.value, False,
+                               [(0, "fifo", slots)], "ppermute", slots)
+        splitters = [("depth-split", split_channel)]
+        if chunk_split:
+            splitters.append(("chunk-split", split_by_tile_pair))
+        for label, splitter in splitters:
+            try:
+                parts = splitter(self.ppn, ch)
+            except NotApplicable:
+                continue
+            classified = [(p.depth, clf.classify(p), pow2_size(cap(p)))
+                          for p in parts]
+            if all(pat is Pattern.FIFO for _, pat, _ in classified):
+                return ChannelPlan(
+                    ch.name, before.value, True,
+                    [(d, pat.value, sz) for d, pat, sz in classified],
+                    f"ppermute({label})",
+                    sum(sz for _, _, sz in classified))
+        slots = pow2_size(cap(ch))
+        lowering = ("ppermute+register" if before is Pattern.IN_ORDER_MULT
+                    else "reorder-buffer")
+        return ChannelPlan(ch.name, before.value, False,
+                           [(0, before.value, slots)], lowering, slots)
+
+    # ------------------------------------------------------------- report --
+
+    def _patterns_before(self) -> Mapping[str, Pattern]:
+        """Pre-FIFOIZE patterns: from the fifoize report when that stage ran,
+        else the earliest classification in the chain, else current."""
+        a: Optional[Analysis] = self
+        best: Optional[Mapping[str, Pattern]] = None
+        while a is not None:
+            if a.fifoize_report is not None:
+                return a.fifoize_report.before
+            if a.patterns is not None:
+                best = a.patterns
+            a = a.parent
+        return best if best is not None else self._current_patterns()
+
+    def _current_patterns(self) -> Mapping[str, Pattern]:
+        if self.patterns is not None:
+            return self.patterns
+        return _classify_channels(self.ppn,
+                                  classifier=self.ctx.classifier(self.ppn))
+
+    def report(self) -> AnalysisReport:
+        """Assemble the artifact from whatever stages ran (classification is
+        filled in from the shared caches if `.classify()` was skipped)."""
+        after = self._current_patterns()
+        before = self._patterns_before()
+        plan_by_name = ({p.name: p for p in self.plans}
+                        if self.plans is not None else {})
+        channels: List[Dict[str, Any]] = []
+        for c in self.ppn.channels:
+            src = _source_name(c)
+            row: Dict[str, Any] = {
+                "name": c.name, "source": src, "depth": c.depth,
+                "edges": c.num_edges,
+                "pattern_before": before.get(src, after[c.name]).value,
+                "pattern_after": after[c.name].value,
+            }
+            if self.sizes is not None:
+                row["slots"] = self.sizes[c.name]
+            if c.name in plan_by_name:
+                row["lowering"] = plan_by_name[c.name].lowering
+            channels.append(row)
+        rep = self.fifoize_report
+        return AnalysisReport(
+            kernel=self.ppn.kernel_name,
+            params=dict(self.ppn.params),
+            stages=list(self.stages),
+            channels=channels,
+            fifoize=None if rep is None else {
+                "split_ok": list(rep.split_ok),
+                "split_failed": list(rep.split_failed),
+                "untouched": list(rep.untouched)},
+            sizes_pow2=self.sizes_pow2,
+            total_slots=(None if self.sizes is None
+                         else sum(self.sizes.values())),
+            plans=(None if self.plans is None
+                   else [p.as_dict() for p in self.plans]),
+            cache=dict(self.ctx.counters,
+                       polyhedron=polyhedron_cache_stats()),
+        )
+
+
+def analyze(kernel: Union[Kernel, PPN, Any],
+            params: Optional[Mapping[str, int]] = None,
+            tilings: Optional[Mapping[str, Tiling]] = None) -> Analysis:
+    """Entry point of the staged pipeline.
+
+    Accepts a `Kernel` (the dataflow oracle runs once, here), an
+    already-built `PPN` (e.g. from `comm.planner.pipeline_ppn`), or any
+    object with `.kernel` / `.tilings` attributes (a polybench `KernelCase`).
+    """
+    if isinstance(kernel, PPN):
+        if params is not None or tilings is not None:
+            raise ValueError("params/tilings are baked into a PPN already")
+        ppn = kernel
+    else:
+        if hasattr(kernel, "kernel") and hasattr(kernel, "tilings"):
+            case = kernel
+            kernel = case.kernel
+            tilings = dict(case.tilings, **(tilings or {}))
+        ppn = PPN.from_kernel(kernel, params=params, tilings=tilings)
+    return Analysis(ppn=ppn, ctx=AnalysisContext())

@@ -1,0 +1,47 @@
+"""Warn-once deprecation shims for the pre-`Analysis` free-function API.
+
+The staged driver (`core/analysis.py`) supersedes the standalone helpers
+(`classify_channel`, `size_channels`, `fifoize`, ...) that each rebuilt the
+per-process timestamp/rank caches on every call.  The helpers stay available
+as thin delegating shims; each emits a single ``DeprecationWarning`` per
+process (not per call site) the first time it is used, so a hot loop over a
+deprecated entry point does not flood stderr.
+"""
+from __future__ import annotations
+
+import functools
+import warnings
+from typing import Callable, Set, TypeVar
+
+F = TypeVar("F", bound=Callable)
+
+_WARNED: Set[str] = set()
+
+
+def reset_deprecation_warnings() -> None:
+    """Forget which shims already warned (test isolation)."""
+    _WARNED.clear()
+
+
+def deprecated_shim(replacement: str) -> Callable[[F], F]:
+    """Mark a free function as superseded by the `Analysis` driver; the
+    wrapped function warns once, then delegates untouched."""
+
+    def decorate(fn: F) -> F:
+        key = f"{fn.__module__}.{fn.__qualname__}"
+
+        @functools.wraps(fn)
+        def shim(*args, **kwargs):
+            if key not in _WARNED:
+                _WARNED.add(key)
+                warnings.warn(
+                    f"{fn.__qualname__}() is deprecated; use {replacement} "
+                    f"(repro.core.analysis) so per-process caches are shared "
+                    f"across stages",
+                    DeprecationWarning, stacklevel=2)
+            return fn(*args, **kwargs)
+
+        shim.__wrapped_impl__ = fn
+        return shim  # type: ignore[return-value]
+
+    return decorate

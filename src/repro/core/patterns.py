@@ -23,6 +23,7 @@ from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 from .affine import Constraint, LinExpr, eq
+from .deprecation import deprecated_shim
 from .polyhedron import Polyhedron
 from .relation import Relation
 from .schedule import AffineSchedule, lex_lt_at_depth
@@ -72,13 +73,20 @@ def classify_edges(src_ts: np.ndarray, dst_ts: np.ndarray) -> Tuple[bool, bool]:
     return in_order, unicity
 
 
-def classify_channel(ppn: PPN, c: Channel) -> Pattern:
+def _classify_channel(ppn: PPN, c: Channel) -> Pattern:
     prod = ppn.processes[c.producer]
     cons = ppn.processes[c.consumer]
     src_ts = prod.local_ts(c.src_pts, ppn.params)
     dst_ts = cons.local_ts(c.dst_pts, ppn.params)
     in_order, unicity = classify_edges(src_ts, dst_ts)
     return Pattern.of(in_order, unicity)
+
+
+@deprecated_shim("analyze(...).classify()")
+def classify_channel(ppn: PPN, c: Channel) -> Pattern:
+    """Per-channel slow path: recomputes both endpoint timestamp arrays on
+    every call.  Kept as the reference oracle for cross-validation tests."""
+    return _classify_channel(ppn, c)
 
 
 # ====================================================== batched enumeration
@@ -100,7 +108,12 @@ class ChannelClassifier:
     free.
     """
 
+    #: total constructor calls (process-wide) — the Analysis driver's tests
+    #: assert the staged pipeline builds exactly one classifier per analysis.
+    construction_count = 0
+
     def __init__(self, ppn: PPN):
+        ChannelClassifier.construction_count += 1
         self.ppn = ppn
         self._proc: Dict[str, Tuple[object, object, np.ndarray]] = {}
         self._verdicts: Dict[Tuple, Tuple[Tuple[bool, bool], Channel]] = {}
@@ -143,16 +156,23 @@ class ChannelClassifier:
         return Pattern.of(*self.edge_flags(c))
 
 
+def _classify_channels(ppn: PPN, channels: Optional[Sequence[Channel]] = None,
+                       classifier: Optional[ChannelClassifier] = None
+                       ) -> Dict[str, Pattern]:
+    clf = classifier if classifier is not None else ChannelClassifier(ppn)
+    clf.ppn = ppn
+    return {c.name: clf.classify(c)
+            for c in (ppn.channels if channels is None else channels)}
+
+
+@deprecated_shim("analyze(...).classify()")
 def classify_channels(ppn: PPN, channels: Optional[Sequence[Channel]] = None,
                       classifier: Optional[ChannelClassifier] = None
                       ) -> Dict[str, Pattern]:
     """Classify every channel of ``ppn`` (or the given subset) in one batched
     pass; pass an existing ``classifier`` to share per-process work across
     calls (e.g. before/after a FIFOIZE rewrite)."""
-    clf = classifier if classifier is not None else ChannelClassifier(ppn)
-    clf.ppn = ppn
-    return {c.name: clf.classify(c)
-            for c in (ppn.channels if channels is None else channels)}
+    return _classify_channels(ppn, channels, classifier)
 
 
 # ============================================================= symbolic side

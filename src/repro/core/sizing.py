@@ -19,6 +19,7 @@ from typing import Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
+from .deprecation import deprecated_shim
 from .patterns import _lex_rank
 from .ppn import PPN, Channel
 
@@ -29,7 +30,11 @@ class SizingContext:
     """Per-process global timestamps + lex ranks, computed once and shared by
     every channel-capacity query (and across PPNs sharing Process objects)."""
 
+    #: total constructor calls — see ChannelClassifier.construction_count.
+    construction_count = 0
+
     def __init__(self, ppn: PPN):
+        SizingContext.construction_count += 1
         self.ppn = ppn
         self._proc: Dict[str, Tuple[object, object, np.ndarray, np.ndarray]] = {}
 
@@ -50,9 +55,8 @@ class SizingContext:
         return gts[rows], rank[rows]
 
 
-def channel_capacity(ppn: PPN, c: Channel,
-                     context: Optional[SizingContext] = None) -> int:
-    """Max #values in flight under the tiled sequential schedule."""
+def _channel_capacity(ppn: PPN, c: Channel,
+                      context: Optional[SizingContext] = None) -> int:
     if c.num_edges == 0:
         return 0
     ctx = context if context is not None else SizingContext(ppn)
@@ -93,6 +97,33 @@ def channel_capacity(ppn: PPN, c: Channel,
     return int(max(0, occupancy.max()))
 
 
+@deprecated_shim("analyze(...).size()")
+def channel_capacity(ppn: PPN, c: Channel,
+                     context: Optional[SizingContext] = None) -> int:
+    """Max #values in flight under the tiled sequential schedule."""
+    return _channel_capacity(ppn, c, context)
+
+
+def tick_capacity(ppn: PPN, ch: Channel) -> int:
+    """Forward-streaming buffer bound: stages run in lockstep ticks
+    (tick = stage rank + local order); a value occupies the channel from its
+    producer tick to its consumer tick (min 1 tick).  This is the
+    double-buffer depth of the FIFO stream, not the paper's program-order
+    liveness (pipelines are self-timed)."""
+    if ch.num_edges == 0:
+        return 0
+    prod = ppn.processes[ch.producer]
+    cons = ppn.processes[ch.consumer]
+    w = prod.stmt_rank + prod.local_ts(ch.src_pts, ppn.params)[:, -1]
+    r = cons.stmt_rank + cons.local_ts(ch.dst_pts, ppn.params)[:, -1]
+    r = np.maximum(r, w + 1)
+    t = np.concatenate([w, r])
+    d = np.concatenate([np.ones(len(w), dtype=np.int64),
+                        -np.ones(len(r), dtype=np.int64)])
+    occupancy = np.cumsum(d[np.lexsort((d, t))])   # reads drain before writes
+    return int(max(0, occupancy.max()))
+
+
 def _lex_le(a: np.ndarray, b: np.ndarray) -> bool:
     """Scalar lex compare — the reference-oracle comparator used by the
     capacity cross-validation tests, not by the vectorized sweep."""
@@ -111,11 +142,17 @@ def pow2_size(capacity: int) -> int:
     return 1 << (int(capacity - 1).bit_length())
 
 
-def size_channels(ppn: PPN, pow2: bool = False,
-                  context: Optional[SizingContext] = None) -> Dict[str, int]:
+def _size_channels(ppn: PPN, pow2: bool = False,
+                   context: Optional[SizingContext] = None) -> Dict[str, int]:
     ctx = context if context is not None else SizingContext(ppn)
     out: Dict[str, int] = {}
     for c in ppn.channels:
-        cap = channel_capacity(ppn, c, context=ctx)
+        cap = _channel_capacity(ppn, c, context=ctx)
         out[c.name] = pow2_size(cap) if pow2 else cap
     return out
+
+
+@deprecated_shim("analyze(...).size()")
+def size_channels(ppn: PPN, pow2: bool = False,
+                  context: Optional[SizingContext] = None) -> Dict[str, int]:
+    return _size_channels(ppn, pow2, context)

@@ -23,8 +23,9 @@ from typing import Dict, Iterable, List, Mapping, Optional, Tuple
 import numpy as np
 
 from .affine import Constraint
+from .deprecation import deprecated_shim
 from .patterns import (ChannelClassifier, Pattern, ProcSpace,
-                       classify_channels, classify_symbolic)
+                       _classify_channels, classify_symbolic)
 from .ppn import PPN, Channel, Process
 from .relation import Relation
 from .schedule import lex_lt_at_depth, prefix_eq
@@ -79,18 +80,10 @@ class FifoizeReport:
     untouched: List[str]             # already-FIFO, untiled, or not applicable
 
 
-def fifoize(ppn: PPN, classifier: Optional[ChannelClassifier] = None
-            ) -> Tuple[PPN, FifoizeReport]:
-    """FIFOIZE: returns the rewritten PPN + a report (non-destructive).
-
-    Channels already classified FIFO are left alone (splitting them would
-    only multiply channel count — cf. gesummv in Table 2, unchanged at 6
-    channels); channels violating the shared-(φ,i)-schedule assumption are
-    skipped (paper line 6).  Classification runs on the batched
-    per-process-rank path; pass an existing ``classifier`` to share its
-    per-process caches with surrounding analyses."""
+def _fifoize(ppn: PPN, classifier: Optional[ChannelClassifier] = None
+             ) -> Tuple[PPN, FifoizeReport]:
     clf = classifier if classifier is not None else ChannelClassifier(ppn)
-    before = classify_channels(ppn, classifier=clf)
+    before = _classify_channels(ppn, classifier=clf)
     new_channels: List[Channel] = []
     ok: List[str] = []
     failed: List[str] = []
@@ -113,8 +106,45 @@ def fifoize(ppn: PPN, classifier: Optional[ChannelClassifier] = None
             failed.append(c.name)
             new_channels.append(c)
     out = PPN(ppn.kernel_name, ppn.params, ppn.processes, new_channels)
-    after = classify_channels(out, classifier=clf)
+    after = _classify_channels(out, classifier=clf)
     return out, FifoizeReport(before, after, ok, failed, untouched)
+
+
+@deprecated_shim("analyze(...).fifoize()")
+def fifoize(ppn: PPN, classifier: Optional[ChannelClassifier] = None
+            ) -> Tuple[PPN, FifoizeReport]:
+    """FIFOIZE: returns the rewritten PPN + a report (non-destructive).
+
+    Channels already classified FIFO are left alone (splitting them would
+    only multiply channel count — cf. gesummv in Table 2, unchanged at 6
+    channels); channels violating the shared-(φ,i)-schedule assumption are
+    skipped (paper line 6).  Classification runs on the batched
+    per-process-rank path; pass an existing ``classifier`` to share its
+    per-process caches with surrounding analyses."""
+    return _fifoize(ppn, classifier)
+
+
+def split_by_tile_pair(ppn: PPN, ch: Channel) -> List[Channel]:
+    """Beyond-paper extension: partition by (φ_producer, φ_consumer) VALUE
+    (not just crossing depth).  Needed when a process interleaves tiles
+    instead of executing them atomically (vpp chunk interleaving) — the
+    paper's ≈ⁿ part then still mixes tiles.  Recovers per-chunk FIFO
+    channels, i.e. derives Megatron's separate per-chunk send/recv streams
+    automatically."""
+    prod = ppn.processes[ch.producer]
+    cons = ppn.processes[ch.consumer]
+    if prod.tiling is None or cons.tiling is None:
+        raise NotApplicable(ch.name)
+    sphi = prod.tiling.tile_coords_of(ch.src_pts)
+    dphi = cons.tiling.tile_coords_of(ch.dst_pts)
+    keys = np.concatenate([sphi, dphi], axis=1)
+    uniq, inv = np.unique(keys, axis=0, return_inverse=True)
+    parts = []
+    for g in range(len(uniq)):
+        mask = inv == g
+        parts.append(replace(ch, src_pts=ch.src_pts[mask],
+                             dst_pts=ch.dst_pts[mask], depth=g + 1))
+    return parts
 
 
 # ========================================================= symbolic backend

@@ -5,5 +5,20 @@ import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _fresh_polyhedron_cache():
+    """Emptiness-verdict memoization must not leak across test modules; the
+    stats dict must stay well-formed whatever the module did to the cache."""
+    from repro.core import clear_polyhedron_cache, polyhedron_cache_stats
+
+    clear_polyhedron_cache()
+    yield
+    stats = polyhedron_cache_stats()
+    assert {"hits", "misses", "empty_entries", "point_entries"} <= set(stats)
+    assert all(isinstance(v, int) and v >= 0 for v in stats.values())
+    assert stats["empty_entries"] + stats["point_entries"] <= stats["misses"]

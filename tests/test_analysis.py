@@ -1,0 +1,142 @@
+"""The staged `Analysis` driver (core/analysis.py).
+
+1. Parity: the driver's patterns, split results and buffer sizes must be
+   byte-identical to the legacy free-function path on every PolyBench kernel.
+2. Context sharing: a full pipeline builds exactly one `ChannelClassifier`
+   and one `SizingContext` (constructor-call counters), and the report's
+   cache section is well-formed.
+3. The deprecated shims emit `DeprecationWarning` exactly once each.
+4. The report is JSON-serializable and carries the documented schema.
+"""
+import json
+import warnings
+
+import pytest
+
+from repro.core import (Analysis, ChannelClassifier, Pattern, SizingContext,
+                        analyze, channel_capacity, classify_channel,
+                        classify_channels, clear_polyhedron_cache, fifoize,
+                        polyhedron_cache_stats, reset_deprecation_warnings,
+                        size_channels)
+from repro.core.polybench import get, kernel_names
+from repro.core.ppn import PPN
+
+
+def _legacy(case):
+    """The pre-driver flow, exactly as quickstart/table2 used to wire it."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        ppn = PPN.from_kernel(case.kernel, tilings=case.tilings)
+        before = {c.name: classify_channel(ppn, c) for c in ppn.channels}
+        ppn2, rep = fifoize(ppn)
+        after = {c.name: classify_channel(ppn2, c) for c in ppn2.channels}
+        sizes = size_channels(ppn2, pow2=True)
+    return ppn2, before, after, sizes, rep
+
+
+@pytest.mark.parametrize("name", kernel_names())
+def test_driver_parity_with_legacy_path(name):
+    case = get(name)
+    ppn2, before, after, sizes, rep = _legacy(case)
+
+    sized = analyze(case).classify().fifoize().size(pow2=True)
+    fz = sized.fifoize_report
+
+    assert sized.parent.parent.patterns == before     # classify stage
+    assert fz.before == before
+    assert dict(sized.patterns) == after
+    assert [c.name for c in sized.ppn.channels] == [c.name
+                                                    for c in ppn2.channels]
+    assert fz.split_ok == rep.split_ok
+    assert fz.split_failed == rep.split_failed
+    assert fz.untouched == rep.untouched
+    assert dict(sized.sizes) == sizes
+
+
+def test_stages_are_immutable_and_share_context():
+    base = analyze(get("gemm"))
+    classified = base.classify()
+    assert base.patterns is None and base.stages == ("ppn",)
+    assert classified is not base and classified.ctx is base.ctx
+    assert classified.stages == ("ppn", "classify")
+    split = classified.fifoize()
+    assert classified.ppn is base.ppn          # fifoize didn't mutate parents
+    assert split.parent is classified
+    with pytest.raises(AttributeError):
+        split.sizes = {}                       # frozen dataclass
+
+
+def test_pipeline_builds_classifier_and_sizing_once():
+    case = get("jacobi-1d")
+    c0 = ChannelClassifier.construction_count
+    s0 = SizingContext.construction_count
+    rep = (analyze(case).classify().fifoize().size(pow2=True)
+           .plan(topology="sequential").report())
+    assert ChannelClassifier.construction_count == c0 + 1
+    assert SizingContext.construction_count == s0 + 1
+    assert rep.cache["classifier_builds"] == 1
+    assert rep.cache["sizing_builds"] == 1
+    poly = rep.cache["polyhedron"]
+    assert {"hits", "misses", "empty_entries", "point_entries"} <= set(poly)
+
+
+def test_report_schema_and_json_roundtrip():
+    case = get("jacobi-1d")
+    rep = (analyze(case).classify().fifoize().size(pow2=True).plan().report())
+    doc = json.loads(rep.to_json())
+    assert doc["kernel"] == "jacobi-1d"
+    assert doc["stages"] == ["ppn", "classify", "fifoize", "size", "plan"]
+    assert doc["sizes_pow2"] is True
+    assert doc["total_slots"] == sum(c["slots"] for c in doc["channels"])
+    for row in doc["channels"]:
+        assert {"name", "source", "depth", "edges", "pattern_before",
+                "pattern_after", "slots", "lowering"} <= set(row)
+    # split parts report the pre-split channel's pattern as "before"
+    parts = [c for c in doc["channels"] if c["depth"] is not None]
+    assert parts and all(p["pattern_before"] != "fifo" and
+                         p["pattern_after"] == "fifo" for p in parts)
+    assert set(doc["fifoize"]) == {"split_ok", "split_failed", "untouched"}
+    assert rep.summary().startswith("jacobi-1d:")
+
+
+def test_report_without_explicit_classify_stage():
+    rep = analyze(get("gemm")).fifoize().report()
+    assert rep.fifoize is not None
+    assert all(c["pattern_after"] == "fifo"
+               for c in rep.channels if c["depth"] is not None)
+
+
+def test_analyze_accepts_prebuilt_ppn():
+    case = get("gemm")
+    ppn = PPN.from_kernel(case.kernel, tilings=case.tilings)
+    a = analyze(ppn).classify()
+    assert a.patterns == analyze(case).classify().patterns
+    with pytest.raises(ValueError):
+        analyze(ppn, params={"N": 4})
+
+
+def test_plan_rejects_unknown_topology():
+    with pytest.raises(ValueError):
+        analyze(get("gemm")).plan(topology="mesh")
+
+
+def test_deprecated_shims_warn_exactly_once():
+    case = get("gemm")
+    ppn = PPN.from_kernel(case.kernel, tilings=case.tilings)
+    ch = ppn.channels[0]
+    reset_deprecation_warnings()
+    shim_calls = [
+        lambda: classify_channel(ppn, ch),
+        lambda: classify_channels(ppn),
+        lambda: channel_capacity(ppn, ch),
+        lambda: size_channels(ppn),
+        lambda: fifoize(ppn),
+    ]
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        for call in shim_calls:
+            call()
+            call()          # second call must stay silent
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == len(shim_calls)
+    assert all("deprecated" in str(w.message) for w in dep)
