@@ -1,0 +1,201 @@
+"""Tile-sweep engine benchmark: 15 PolyBench kernels × K tile sizes.
+
+    PYTHONPATH=src python -m benchmarks.bench_sweep [--repeats N] [--workers W]
+                                                    [--sizes 1,2,...] [--cache P]
+
+Per kernel, three measurements over the same configuration list:
+
+* **naive** — a fresh `analyze(kernel, tilings=cfg)` per configuration with
+  the polyhedron caches cleared before each one: the from-scratch rebuild the
+  engine replaces (dataflow oracle + domains + classification + sizing every
+  time);
+* **sweep** — `repro.core.sweep` starting cold: the oracle runs once, every
+  tiling-independent structure is reused across configurations;
+* **parallel** — `sweep_parallel` over a process pool (whole-suite wall
+  clock), with per-worker verdict-cache merge.
+
+Reports must be identical (modulo the execution-diagnostics ``cache`` field)
+between naive, sweep, and parallel runs — the sweep engine is pure
+amortization, and this script REFUSES to record results on any mismatch.
+
+Writes BENCH_sweep.json: per-kernel naive/sweep seconds + speedup, the best
+tiling found (highest compute-channel FIFO%% after FIFOIZE, fewest buffer
+slots as tie-break), and suite totals including the parallel wall clock.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import (SweepJob, analyze, clear_polyhedron_cache,
+                        load_polyhedron_cache, report_payload,
+                        save_polyhedron_cache, sweep, sweep_parallel)
+from repro.core.polybench import get, kernel_names
+from repro.core.tiling import rescale_tilings
+
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_sweep.json"
+
+#: default tile-size axis: b=1 is the degenerate every-point-a-tile boundary,
+#: b=4 the paper's reference configuration
+TILE_SIZES = (1, 2, 3, 4, 5, 6, 7, 8, 10, 12, 14, 16)
+
+DESCRIPTION = (
+    "Naive per-tiling analyze() loop vs the incremental tile-sweep engine "
+    "(repro.core.sweep) on all 15 PolyBench kernels; byte-identical reports "
+    "(modulo the execution-diagnostics 'cache' field), single process, cold "
+    "caches; 'parallel' is the process-pool driver over the same jobs. "
+    "Regenerate with: PYTHONPATH=src python -m benchmarks.bench_sweep")
+
+
+def configs(case, sizes: Sequence[int]):
+    return [rescale_tilings(case.tilings, b) for b in sizes]
+
+
+def naive_run(kernel, cfgs) -> List[dict]:
+    """Fresh full analysis per configuration — truly from scratch."""
+    out = []
+    for cfg in cfgs:
+        clear_polyhedron_cache()
+        out.append(analyze(kernel, tilings=cfg).classify().fifoize()
+                   .size(pow2=True).report().as_dict())
+    return out
+
+
+def _compute_stats(case, report: dict) -> Dict[str, int]:
+    """FIFO%% and buffer slots over compute channels (as the paper counts)."""
+    comp = set(case.compute)
+    rows = [c for c in report["channels"]
+            if c["name"].split("->", 1)[0] in comp
+            and c["name"].split("->", 1)[1].split(".", 1)[0] in comp]
+    fifo = sum(r["pattern_after"] == "fifo" for r in rows)
+    return {"channels": len(rows), "fifo": fifo,
+            "pct_fifo": round(100 * fifo / max(len(rows), 1)),
+            "total_slots": sum(r.get("slots", 0) for r in rows)}
+
+
+def best_tiling(case, sizes: Sequence[int], reports: List[dict]) -> Dict:
+    scored = []
+    for b, rep in zip(sizes, reports):
+        s = _compute_stats(case, rep)
+        scored.append((-s["pct_fifo"], s["total_slots"], b, s))
+    scored.sort()
+    _, _, b, s = scored[0]
+    return dict(s, tile_size=b)
+
+
+def run(sizes: Sequence[int], repeats: int, workers: Optional[int],
+        cache_path: Optional[str]) -> dict:
+    if cache_path:
+        print(f"persistent cache: loaded "
+              f"{load_polyhedron_cache(cache_path)} entries")
+    rows = []
+    mismatches = []
+    per_kernel_sweep: Dict[str, List[dict]] = {}
+    for name in kernel_names():
+        case = get(name)
+        cfgs = configs(case, sizes)
+        t_naive = t_sweep = float("inf")
+        naive = swept = None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            naive = naive_run(case.kernel, cfgs)
+            t_naive = min(t_naive, time.perf_counter() - t0)
+            clear_polyhedron_cache()
+            t0 = time.perf_counter()
+            swept = [r.as_dict() for r in sweep(case.kernel, cfgs)]
+            t_sweep = min(t_sweep, time.perf_counter() - t0)
+        identical = ([report_payload(r) for r in naive]
+                     == [report_payload(r) for r in swept])
+        if not identical:
+            mismatches.append(name)
+        per_kernel_sweep[name] = swept
+        rows.append({
+            "kernel": name, "tilings": len(cfgs),
+            "naive_seconds": round(t_naive, 4),
+            "sweep_seconds": round(t_sweep, 4),
+            "speedup": round(t_naive / t_sweep, 2),
+            "identical_reports": identical,
+            "best_tiling": best_tiling(case, sizes, swept),
+        })
+        print(f"{name:12s} naive {t_naive*1e3:8.1f}ms "
+              f"sweep {t_sweep*1e3:8.1f}ms  {t_naive/t_sweep:5.2f}x  "
+              f"best b={rows[-1]['best_tiling']['tile_size']} "
+              f"({rows[-1]['best_tiling']['pct_fifo']}% fifo)")
+
+    # process-pool driver over the whole suite (same jobs, one wall clock)
+    jobs = [SweepJob(name, tuple(configs(get(name), sizes)))
+            for name in kernel_names()]
+    # big kernels first for pool balance; results come back in job order
+    order = sorted(range(len(jobs)),
+                   key=lambda i: -rows[i]["sweep_seconds"])
+    t_par = float("inf")
+    par = None
+    for _ in range(repeats):           # best-of, like the serial sections
+        clear_polyhedron_cache()
+        t0 = time.perf_counter()
+        par = sweep_parallel([jobs[i] for i in order], max_workers=workers)
+        t_par = min(t_par, time.perf_counter() - t0)
+    for slot, i in enumerate(order):
+        name = jobs[i].kernel
+        if ([report_payload(r) for r in par[slot]]
+                != [report_payload(r) for r in per_kernel_sweep[name]]):
+            mismatches.append(f"parallel:{name}")
+
+    if mismatches:
+        raise SystemExit(f"report mismatch on {mismatches} — refusing to "
+                         f"record (the sweep engine must be pure "
+                         f"amortization)")
+    total_naive = sum(r["naive_seconds"] for r in rows)
+    total_sweep = sum(r["sweep_seconds"] for r in rows)
+    doc = {
+        "description": DESCRIPTION,
+        "tile_sizes": list(sizes),
+        "kernels": rows,
+        "totals": {
+            "naive_seconds": round(total_naive, 4),
+            "sweep_seconds": round(total_sweep, 4),
+            "speedup": round(total_naive / total_sweep, 2),
+            "parallel_seconds": round(t_par, 4),
+            "parallel_workers": workers or os.cpu_count(),
+            "parallel_speedup_vs_naive": round(total_naive / t_par, 2),
+        },
+        "host": {"python": platform.python_version(),
+                 "machine": platform.machine(),
+                 "cpus": os.cpu_count()},
+    }
+    if cache_path:
+        print(f"persistent cache: saved "
+              f"{save_polyhedron_cache(cache_path)} entries")
+    return doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--sizes", type=str, default=None,
+                    help="comma-separated tile sizes (default: "
+                         + ",".join(map(str, TILE_SIZES)) + ")")
+    ap.add_argument("--cache", type=str, default=None,
+                    help="persistent verdict-cache path (load before, save "
+                         "after)")
+    args = ap.parse_args()
+    if args.repeats < 1:
+        ap.error("--repeats must be >= 1")
+    sizes = (tuple(int(s) for s in args.sizes.split(","))
+             if args.sizes else TILE_SIZES)
+    doc = run(sizes, args.repeats, args.workers, args.cache)
+    BENCH_PATH.write_text(json.dumps(doc, indent=1) + "\n")
+    t = doc["totals"]
+    print(f"total: naive {t['naive_seconds']}s, sweep {t['sweep_seconds']}s "
+          f"({t['speedup']}x), parallel {t['parallel_seconds']}s "
+          f"({t['parallel_speedup_vs_naive']}x vs naive)")
+
+
+if __name__ == "__main__":
+    main()

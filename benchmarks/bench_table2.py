@@ -24,7 +24,8 @@ def best_of(repeats: int):
     out = []
     for per_kernel in zip(*runs):
         r = dict(per_kernel[0])
-        r["seconds"] = min(x["seconds"] for x in per_kernel)
+        for key in table2_fifo.TIMING_KEYS:
+            r[key] = min(x[key] for x in per_kernel)
         out.append(r)
     return out
 
@@ -40,8 +41,8 @@ def main() -> None:
     opt = best_of(args.repeats)
     if len(opt) != len(doc["seed"]):
         raise SystemExit("kernel set changed vs recorded seed — refusing")
+    drop = table2_fifo.strip_timing
     for s, o in zip(doc["seed"], opt):
-        drop = lambda r: {k: v for k, v in r.items() if k != "seconds"}
         if drop(s) != drop(o):
             raise SystemExit(f"classification drift on {s['kernel']}: "
                              f"{drop(s)} != {drop(o)} — refusing to record")

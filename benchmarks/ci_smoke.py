@@ -1,38 +1,87 @@
-"""CI smoke benchmark: table2 on a 3-kernel subset with a regression guard.
+"""CI smoke benchmark: table2 subset + tile-sweep engine, with guards.
 
     PYTHONPATH=src python -m benchmarks.ci_smoke
 
-Checks, for gemm / jacobi-1d / seidel-2d:
-  * classifications match the recorded BENCH_table2.json seed rows exactly
-    (FIFO/split counts are the paper's results — any drift is a correctness
-    regression);
-  * wall-clock stays within GUARD_FACTOR of the recorded optimized timings
-    (generous to absorb CI machine variance, tight enough to catch the
-    analysis falling back off the vectorized path).
+Three sections, in order:
+
+1. **Sweep smoke** (cold caches): for gemm / jacobi-1d / seidel-2d × 3 tile
+   sizes, the sweep engine must produce reports identical to a fresh
+   `analyze()` per tiling and finish within ``SWEEP_BUDGET`` (0.6×) of the
+   naive per-tiling loop — the amortization regression guard.  Runs FIRST so
+   no disk-warmed cache can distort the ratio.
+2. **Persistent store**: if ``REPRO_POLY_CACHE`` is set (CI wires it to an
+   `actions/cache` path), the verdict store is loaded here — warming the
+   domain-enumeration boxes for the next section — and saved again at exit.
+3. **Table2 subset**: classifications must match the recorded
+   BENCH_table2.json rows exactly and stay within GUARD_FACTOR of the
+   recorded wall-clock.
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
+import time
 from pathlib import Path
+
+from repro.core import (analyze, clear_polyhedron_cache,
+                        load_polyhedron_cache, report_payload,
+                        save_polyhedron_cache, sweep)
+from repro.core.polybench import get
+from repro.core.tiling import rescale_tilings
 
 from . import table2_fifo
 
 KERNELS = ("gemm", "jacobi-1d", "seidel-2d")
 GUARD_FACTOR = 4.0
 
+SWEEP_SIZES = (2, 4, 6)
+SWEEP_BUDGET = 0.6        # sweep must cost ≤ 0.6× the naive per-tiling loop
+
 BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_table2.json"
+CACHE_ENV = "REPRO_POLY_CACHE"
 
 
-def main() -> int:
+def sweep_smoke(failures: list) -> None:
+    total_naive = total_sweep = 0.0
+    for name in KERNELS:
+        case = get(name)
+        cfgs = [rescale_tilings(case.tilings, b) for b in SWEEP_SIZES]
+        t0 = time.perf_counter()
+        naive = []
+        for cfg in cfgs:
+            clear_polyhedron_cache()
+            naive.append(analyze(case.kernel, tilings=cfg).classify()
+                         .fifoize().size(pow2=True).report())
+        t_naive = time.perf_counter() - t0
+        clear_polyhedron_cache()
+        t0 = time.perf_counter()
+        swept = sweep(case.kernel, cfgs)
+        t_sweep = time.perf_counter() - t0
+        if ([report_payload(r) for r in naive]
+                != [report_payload(r) for r in swept]):
+            failures.append(f"sweep/{name}: reports differ from fresh "
+                            f"analyze() — amortization changed results")
+        total_naive += t_naive
+        total_sweep += t_sweep
+    ratio = total_sweep / total_naive
+    status = "ok" if ratio <= SWEEP_BUDGET else "SLOW"
+    print(f"sweep smoke  naive {total_naive*1e3:7.1f}ms "
+          f"sweep {total_sweep*1e3:7.1f}ms ratio {ratio:.2f} "
+          f"(budget {SWEEP_BUDGET}) {status}")
+    if ratio > SWEEP_BUDGET:
+        failures.append(f"sweep: {total_sweep:.3f}s exceeds "
+                        f"{SWEEP_BUDGET}x naive loop ({total_naive:.3f}s)")
+
+
+def table2_smoke(failures: list) -> None:
     doc = json.loads(BENCH_PATH.read_text())
     recorded = {r["kernel"]: r for r in doc["optimized"]}
-    failures = []
+    drop = table2_fifo.strip_timing
     for name in KERNELS:
         got = min((table2_fifo.run_kernel(name) for _ in range(2)),
                   key=lambda r: r["seconds"])
         want = recorded[name]
-        drop = lambda r: {k: v for k, v in r.items() if k != "seconds"}
         if drop(got) != drop(want):
             failures.append(f"{name}: classification drift {drop(got)} "
                             f"!= {drop(want)}")
@@ -43,6 +92,25 @@ def main() -> int:
         if got["seconds"] > budget:
             failures.append(f"{name}: {got['seconds']:.3f}s exceeds "
                             f"{budget:.3f}s timing budget")
+
+
+def main() -> int:
+    failures: list = []
+    # 1. sweep guard first — it clears caches, so it must not see (or wipe)
+    #    the persistent store
+    sweep_smoke(failures)
+    # 2. warm start for the remaining sections, refreshed on the way out
+    cache_path = os.environ.get(CACHE_ENV)
+    if cache_path:
+        clear_polyhedron_cache()
+        print(f"persistent store: loaded "
+              f"{load_polyhedron_cache(cache_path)} entries "
+              f"from {cache_path}")
+    # 3. table2 classification + timing guard
+    table2_smoke(failures)
+    if cache_path and not failures:
+        print(f"persistent store: saved "
+              f"{save_polyhedron_cache(cache_path)} entries")
     for f in failures:
         print("FAIL:", f, file=sys.stderr)
     return 1 if failures else 0

@@ -18,7 +18,9 @@ from .patterns import (ChannelClassifier, Pattern, ProcSpace, classify_channel,
                        classify_channels, classify_edges, classify_symbolic,
                        in_order_symbolic, unicity_symbolic)
 from .polyhedron import (Polyhedron, clear_polyhedron_cache,
-                         polyhedron_cache_stats)
+                         export_polyhedron_cache, load_polyhedron_cache,
+                         merge_polyhedron_cache, polyhedron_cache_stats,
+                         save_polyhedron_cache)
 from .ppn import PPN, Channel, DomainIndex, Process
 from .relation import Relation
 from .schedule import AffineSchedule
@@ -27,7 +29,8 @@ from .sizing import (SizingContext, channel_capacity, pow2_size,
 from .split import (FifoizeReport, NotApplicable, fifoize, fifoize_relation,
                     split_by_tile_pair, split_channel, split_covers,
                     split_relation)
-from .tiling import Tiling, rectangular
+from .sweep import (SweepJob, report_payload, run_job, sweep, sweep_parallel)
+from .tiling import (Tiling, rectangular, rescale_tilings, unit_tilings)
 
 __all__ = [
     "Access", "AffineSchedule", "Analysis", "AnalysisContext",
@@ -35,11 +38,15 @@ __all__ = [
     "Constraint", "DepEdges", "DomainIndex", "FifoizeReport", "Kernel",
     "LinExpr", "NotApplicable", "PPN", "Pattern", "Polyhedron", "ProcSpace",
     "Process", "Relation", "SizingContext", "Statement", "Tiling", "analyze",
-    "ceil_div", "channel_capacity", "classify_channel", "classify_channels",
-    "classify_edges", "classify_symbolic", "clear_polyhedron_cache",
-    "direct_dependences", "eq", "fifoize", "fifoize_relation", "floor_div",
-    "ge", "gt", "in_order_symbolic", "le", "lt", "polyhedron_cache_stats",
-    "pow2_size", "rectangular", "reset_deprecation_warnings", "size_channels",
-    "split_by_tile_pair", "split_channel", "split_covers", "split_relation",
-    "tick_capacity", "unicity_symbolic", "v",
+    "SweepJob", "ceil_div", "channel_capacity", "classify_channel",
+    "classify_channels", "classify_edges", "classify_symbolic",
+    "clear_polyhedron_cache", "direct_dependences", "eq",
+    "export_polyhedron_cache", "fifoize", "fifoize_relation", "floor_div",
+    "ge", "gt", "in_order_symbolic", "le", "load_polyhedron_cache", "lt",
+    "merge_polyhedron_cache", "polyhedron_cache_stats", "pow2_size",
+    "rectangular", "report_payload", "rescale_tilings",
+    "reset_deprecation_warnings", "run_job", "save_polyhedron_cache",
+    "size_channels", "split_by_tile_pair", "split_channel", "split_covers",
+    "split_relation", "sweep", "sweep_parallel", "tick_capacity",
+    "unicity_symbolic", "unit_tilings", "v",
 ]

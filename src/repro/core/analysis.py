@@ -52,7 +52,7 @@ class AnalysisContext:
         self.counters: Dict[str, int] = {
             "classifier_builds": 0, "sizing_builds": 0,
             "classify_stages": 0, "fifoize_stages": 0,
-            "size_stages": 0, "plan_stages": 0,
+            "size_stages": 0, "plan_stages": 0, "retiles": 0,
         }
 
     def classifier(self, ppn: PPN) -> ChannelClassifier:
@@ -165,6 +165,34 @@ class Analysis:
     def _next(self, stage: str, **changes) -> "Analysis":
         return replace(self, stages=self.stages + (stage,), parent=self,
                        **changes)
+
+    def retile(self, tilings: Optional[Mapping[str, Tiling]] = None
+               ) -> "Analysis":
+        """A fresh base-stage `Analysis` of the SAME kernel under another
+        tiling assignment, skipping everything tiling-independent.
+
+        The dataflow oracle never reruns: the root PPN's `Channel` objects,
+        domain arrays, `DomainIndex` row lookups, and per-process base
+        timestamps/lex ranks are all carried over; downstream stages
+        recompute only tile coordinates and the composite (φ, base) ranks.
+        Results are identical to ``analyze(kernel, tilings=...)`` — retiling
+        is pure amortization (`tests/test_sweep.py` asserts report parity on
+        every PolyBench kernel).
+
+        Processes absent from ``tilings`` become untiled, mirroring
+        `PPN.from_kernel`.  The chain is walked back to its root first, so
+        retiling a fifoized stage restarts from the original (unsplit)
+        channels; the returned `Analysis` has a fresh `AnalysisContext` (per-
+        tiling classifier/sizing caches must not leak across configurations).
+        """
+        root = self
+        while root.parent is not None:
+            root = root.parent
+        ctx = AnalysisContext()
+        # retile hops this chain descends from (diagnostics; fresh analyze
+        # reads 0, a sweep configuration 1, a retile of a retile 2, …)
+        ctx.counters["retiles"] = self.ctx.counters["retiles"] + 1
+        return Analysis(ppn=root.ppn.retiled(tilings), ctx=ctx)
 
     def classify(self) -> "Analysis":
         """Classify every channel on the shared batched-rank path."""

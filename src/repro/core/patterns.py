@@ -49,11 +49,24 @@ class Pattern(Enum):
 def _lex_rank(ts: np.ndarray) -> np.ndarray:
     """Rank of each row in lexicographic order — equal rows get EQUAL rank
     (x ⪯ y must treat identical timestamps as equal, and unicity compares
-    source *values*)."""
-    if ts.shape[0] == 0:
+    source *values*).
+
+    Computed as one `np.lexsort` + adjacent-difference cumsum: identical
+    dense ranks to ``np.unique(axis=0).return_inverse`` (both orders rows by
+    numeric column-lexicographic comparison) without materializing the
+    structured-dtype view `np.unique` sorts through.
+    """
+    n = ts.shape[0]
+    if n == 0:
         return np.zeros(0, dtype=np.int64)
-    _, inv = np.unique(ts, axis=0, return_inverse=True)
-    return inv.astype(np.int64)
+    if ts.ndim != 2 or ts.shape[1] == 0:
+        return np.zeros(n, dtype=np.int64)
+    order = np.lexsort(ts.T[::-1])
+    sorted_ts = ts[order]
+    distinct = np.any(sorted_ts[1:] != sorted_ts[:-1], axis=1)
+    ranks = np.empty(n, dtype=np.int64)
+    ranks[order] = np.concatenate([[0], np.cumsum(distinct)])
+    return ranks
 
 
 # ========================================================== enumeration side
@@ -123,15 +136,33 @@ class ChannelClassifier:
         cached = self._proc.get(name)
         if cached is not None and cached[0] is proc:
             return cached
-        ts = proc.local_ts(proc.pts, self.ppn.params)
-        cached = (proc, proc.domain_index(), _lex_rank(ts))
+        # ranks come from the Process cache tiers: the untiled segment is
+        # ranked once per kernel (shared across retilings), only the
+        # (φ, base-rank) composite is ranked per tiling.
+        rank = proc.local_rank(self.ppn.params)
+        # rank injective on the domain ⟺ the local schedule is (every point
+        # a distinct timestamp) — then distinct ranks ≡ distinct domain rows
+        injective = rank.size == 0 or int(rank.max()) == rank.size - 1
+        cached = (proc, proc.domain_index(), rank, injective)
         self._proc[name] = cached
         return cached
 
     def ranks_of(self, proc_name: str, pts: np.ndarray) -> np.ndarray:
         """Local-schedule lex ranks of ``pts`` (rows of the process domain)."""
-        _, index, rank = self._proc_data(proc_name)
+        _, index, rank, _ = self._proc_data(proc_name)
         return rank[index.rows_of(pts)]
+
+    @staticmethod
+    def _distinct_sources(c: Channel, src_rows: np.ndarray) -> int:
+        """Number of distinct producer instances feeding ``c`` — a property
+        of the dataflow relation, so it is cached on the (tiling-shared)
+        Channel object and survives every retiling of a sweep."""
+        cached = c.__dict__.get("_src_distinct")
+        if cached is not None and cached[0] is c.src_pts:
+            return cached[1]
+        distinct = len(np.unique(src_rows))
+        c.__dict__["_src_distinct"] = (c.src_pts, distinct)
+        return distinct
 
     def edge_flags(self, c: Channel) -> Tuple[bool, bool]:
         """(in_order, unicity) — identical to :func:`classify_edges`."""
@@ -143,11 +174,22 @@ class ChannelClassifier:
         # the Channel is pinned in the cache value, so the ids stay valid
         if hit is not None and hit[1].src_pts is c.src_pts:
             return hit[0]
-        src_rank = self.ranks_of(c.producer, c.src_pts)
-        dst_rank = self.ranks_of(c.consumer, c.dst_pts)
-        order = np.argsort(dst_rank, kind="stable")
-        in_order = bool(np.all(np.diff(src_rank[order]) >= 0))
-        unicity = len(np.unique(src_rank)) == n
+        _, p_index, p_rank, p_injective = self._proc_data(c.producer)
+        _, c_index, c_rank, _ = self._proc_data(c.consumer)
+        src_rows = p_index.rows_of(c.src_pts)
+        src_rank = p_rank[src_rows]
+        dst_rank = c_rank[c_index.rows_of(c.dst_pts)]
+        if bool(np.all(dst_rank[1:] >= dst_rank[:-1])):
+            seq = src_rank        # edges already in consumer order (a stable
+        else:                     # argsort of a sorted key is the identity)
+            seq = src_rank[np.argsort(dst_rank, kind="stable")]
+        in_order = bool(np.all(seq[1:] >= seq[:-1]))
+        if p_injective:
+            # distinct ranks == distinct rows — and the row multiset is
+            # tiling-independent, so the count is computed once per channel
+            unicity = self._distinct_sources(c, src_rows) == n
+        else:
+            unicity = len(np.unique(src_rank)) == n
         flags = (in_order, unicity)
         self._verdicts[key] = (flags, c)
         return flags

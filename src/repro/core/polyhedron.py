@@ -25,6 +25,9 @@ from __future__ import annotations
 
 import itertools
 import math
+import os
+import pickle
+import tempfile
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
@@ -41,23 +44,49 @@ _INT64_SAFE = 1 << 62
 # Canonical-form verdict caches.  Keys derive from the *content* of a system
 # (variables + normalized matrix bytes), so mutating a Polyhedron after a
 # cached query cannot return a stale verdict — the key changes with it.
+#
+# Keys are two-level: ``(structure, consts)`` where ``structure`` is the
+# canonical coefficient matrix (variables + coefficient bytes) and ``consts``
+# the constant column as an int tuple.  Canonical systems have pairwise
+# distinct coefficient rows (dominance keeps one row per coefficient vector)
+# and are sorted by coefficient vector, so two systems sharing a structure
+# align row-for-row and differ only in their constants — exactly how the
+# classifier's violation systems vary across tile-size configurations.  A
+# bounded side index per structure enables *monotone inference*: loosening a
+# constant (larger c in ``expr + c ≥ 0``) only grows the feasible set, so a
+# known non-empty sibling with pointwise-smaller constants certifies
+# non-emptiness (and a known empty sibling with pointwise-larger constants
+# certifies emptiness) without running Fourier–Motzkin at all.
 _EMPTY_MEMO: Dict[object, bool] = {}
 _POINT_MEMO: Dict[object, Optional[Dict[str, int]]] = {}
+_BOX_MEMO: Dict[object, Dict[str, Tuple[int, int]]] = {}
+_EMPTY_STRUCT: Dict[object, List[Tuple[Tuple[int, ...], bool]]] = {}
+_POINT_STRUCT: Dict[object, List[Tuple[Tuple[int, ...], Dict[str, int]]]] = {}
 _MEMO_LIMIT = 1 << 17
-_MEMO_STATS = {"hits": 0, "misses": 0}
+_STRUCT_FANOUT = 16        # monotone entries kept/scanned per structure node
+_MEMO_STATS = {"hits": 0, "misses": 0, "evictions": 0, "struct_hits": 0,
+               "loaded": 0}
+
+#: bump when the key or value layout of the persistent store changes; files
+#: with another version are silently ignored (the cache is safe to delete).
+CACHE_VERSION = "repro-polyhedron-cache-v1"
 
 
 def clear_polyhedron_cache() -> None:
     _EMPTY_MEMO.clear()
     _POINT_MEMO.clear()
-    _MEMO_STATS["hits"] = 0
-    _MEMO_STATS["misses"] = 0
+    _BOX_MEMO.clear()
+    _EMPTY_STRUCT.clear()
+    _POINT_STRUCT.clear()
+    for k in _MEMO_STATS:
+        _MEMO_STATS[k] = 0
 
 
 def polyhedron_cache_stats() -> Dict[str, int]:
     return dict(_MEMO_STATS,
                 empty_entries=len(_EMPTY_MEMO),
-                point_entries=len(_POINT_MEMO))
+                point_entries=len(_POINT_MEMO),
+                box_entries=len(_BOX_MEMO))
 
 
 def _memo_get(memo: Dict, key):
@@ -69,10 +98,117 @@ def _memo_get(memo: Dict, key):
     return False, None
 
 
-def _memo_put(memo: Dict, key, value):
+def _memo_put(memo: Dict, key, value, struct: Optional[Dict] = None):
     if len(memo) >= _MEMO_LIMIT:
-        memo.clear()
+        # bounded eviction: drop the oldest half (dict preserves insertion
+        # order) instead of wiping the whole cache — the retained half keeps
+        # long-running sweeps warm across the limit.
+        drop = max(1, len(memo) // 2)
+        for k in list(itertools.islice(iter(memo), drop)):
+            del memo[k]
+        _MEMO_STATS["evictions"] += drop
+        if struct is not None:
+            struct.clear()      # lossy side index; rebuild from later queries
     memo[key] = value
+
+
+def _struct_add(struct: Dict, skey, consts: Tuple[int, ...], value) -> None:
+    node = struct.setdefault(skey, [])
+    if len(node) >= _STRUCT_FANOUT:
+        node.pop(0)
+    node.append((consts, value))
+
+
+def _struct_probe_empty(skey, consts: Tuple[int, ...]) -> Optional[bool]:
+    """Monotone inference over siblings sharing the coefficient structure."""
+    for c2, empty2 in _EMPTY_STRUCT.get(skey, ()):
+        if len(c2) != len(consts):
+            continue
+        if empty2:
+            if all(a <= b for a, b in zip(consts, c2)):
+                return True        # tighter than a known-empty sibling
+        else:
+            if all(a >= b for a, b in zip(consts, c2)):
+                return False       # looser than a known-non-empty sibling
+    return None
+
+
+def _struct_probe_point(skey, consts: Tuple[int, ...]
+                        ) -> Optional[Dict[str, int]]:
+    """A sibling's integer point stays valid when every constant loosened."""
+    for c2, pt in _POINT_STRUCT.get(skey, ()):
+        if len(c2) == len(consts) and all(a >= b
+                                          for a, b in zip(consts, c2)):
+            return pt
+    return None
+
+
+# ------------------------------------------------------- persistent store ----
+
+def export_polyhedron_cache() -> Dict[str, object]:
+    """Snapshot of the verdict caches (picklable, version-tagged).  Used both
+    by the on-disk persistence below and by the sweep engine's process-pool
+    driver to merge worker caches back into the parent."""
+    return {"version": CACHE_VERSION,
+            "empty": list(_EMPTY_MEMO.items()),
+            "point": list(_POINT_MEMO.items()),
+            "box": list(_BOX_MEMO.items())}
+
+
+def merge_polyhedron_cache(snapshot: Mapping[str, object]) -> int:
+    """Adopt entries from an `export_polyhedron_cache` snapshot; returns the
+    number of new entries.  Unknown versions are ignored (returns 0)."""
+    if (not isinstance(snapshot, Mapping)
+            or snapshot.get("version") != CACHE_VERSION):
+        return 0
+    adopted = 0
+    for name, memo, struct in (("empty", _EMPTY_MEMO, _EMPTY_STRUCT),
+                               ("point", _POINT_MEMO, _POINT_STRUCT),
+                               ("box", _BOX_MEMO, None)):
+        for key, value in snapshot.get(name, ()):
+            if key not in memo:
+                _memo_put(memo, key, value, struct)
+                adopted += 1
+    _MEMO_STATS["loaded"] += adopted
+    return adopted
+
+
+def save_polyhedron_cache(path: str) -> int:
+    """Write the verdict caches to ``path`` (atomic rename).  The file is a
+    pure cache: versioned, safe to delete, rebuilt on demand.  Returns the
+    number of entries written."""
+    snapshot = export_polyhedron_cache()
+    n = sum(len(snapshot[k]) for k in ("empty", "point", "box"))
+    directory = os.path.dirname(os.path.abspath(path))
+    os.makedirs(directory, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as fh:
+            pickle.dump(snapshot, fh, protocol=pickle.HIGHEST_PROTOCOL)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    return n
+
+
+def load_polyhedron_cache(path: str) -> int:
+    """Merge a `save_polyhedron_cache` file into the in-memory caches.
+    Missing, corrupt, or version-mismatched files are ignored (returns 0) —
+    deleting the cache is always safe.  Only load files you wrote: the store
+    is a local pickle, not an interchange format."""
+    try:
+        with open(path, "rb") as fh:
+            snapshot = pickle.load(fh)
+        return merge_polyhedron_cache(snapshot)
+    except Exception:
+        # a cache must never take the process down: any malformed file —
+        # unreadable, truncated, or a same-version snapshot with mangled
+        # fields — just means a cold start
+        return 0
 
 
 # ---------------------------------------------------------- matrix helpers ---
@@ -279,11 +415,17 @@ class Polyhedron:
 
     @staticmethod
     def _memo_key(variables: Tuple[str, ...], mat: np.ndarray):
+        """``((variables, coeff-structure), consts)`` — the canonical matrix
+        split into its coefficient structure and constant column, so systems
+        differing only in constants (e.g. across tile-size configurations)
+        share a structure node for monotone inference."""
+        consts = tuple(int(x) for x in mat[:, -1])
         if mat.dtype == object:
-            body = tuple(tuple(int(x) for x in row) for row in mat)
+            body = tuple(tuple(int(x) for x in row[:-1]) for row in mat)
         else:
-            body = (mat.shape, mat.tobytes())
-        return variables, body
+            coeff = np.ascontiguousarray(mat[:, :-1])
+            body = (coeff.shape, coeff.tobytes())
+        return (variables, body), consts
 
     # --------------------------------------------------------- normalization
     @staticmethod
@@ -332,19 +474,31 @@ class Polyhedron:
     @staticmethod
     def _rationally_empty_canonical(variables: Tuple[str, ...],
                                     mat: np.ndarray) -> bool:
-        key = Polyhedron._memo_key(variables, mat)
+        skey, consts = Polyhedron._memo_key(variables, mat)
+        key = (skey, consts)
         hit, cached = _memo_get(_EMPTY_MEMO, key)
         if hit:
             return cached
+        inferred = _struct_probe_empty(skey, consts)
+        if inferred is not None:
+            _MEMO_STATS["struct_hits"] += 1
+            _memo_put(_EMPTY_MEMO, key, inferred, _EMPTY_STRUCT)
+            return inferred
         result = False
+        complete = True
         for col in _elimination_order(mat):
             mat = _fm_eliminate_matrix(mat, col)
             if mat is None:
                 result = True
                 break
             if mat.shape[0] > 4000:   # FM blow-up guard; fall back conservative
+                complete = False
                 break
-        _memo_put(_EMPTY_MEMO, key, result)
+        _memo_put(_EMPTY_MEMO, key, result, _EMPTY_STRUCT)
+        if complete:
+            # only exact verdicts feed the monotone index — a guard-tripped
+            # "conservatively non-empty" must not certify looser siblings
+            _struct_add(_EMPTY_STRUCT, skey, consts, result)
         return result
 
     # --------------------------------------------------------- integer search
@@ -387,14 +541,23 @@ class Polyhedron:
     def _find_integer_point_canonical(cvars: Tuple[str, ...], cmat: np.ndarray,
                                       max_nodes: int, default_radius: int
                                       ) -> Optional[Dict[str, int]]:
-        memo_key = (Polyhedron._memo_key(cvars, cmat), max_nodes, default_radius)
+        skey, consts = Polyhedron._memo_key(cvars, cmat)
+        skey = (skey, max_nodes, default_radius)
+        memo_key = (skey, consts)
         hit, cached = _memo_get(_POINT_MEMO, memo_key)
         if hit:
             return dict(cached) if cached is not None else None
         rows = _matrix_to_rows(cvars, cmat)
+        candidate = _struct_probe_point(skey, consts)
+        if candidate is not None and all(r.eval(candidate) >= 0 for r in rows):
+            # a sibling's point, re-verified against THESE constants (the
+            # monotone argument guarantees it, the evaluation costs nothing)
+            _MEMO_STATS["struct_hits"] += 1
+            _memo_put(_POINT_MEMO, memo_key, dict(candidate), _POINT_STRUCT)
+            return dict(candidate)
         variables = list({v: None for r in rows for v in r.coeffs})
         if not variables:
-            _memo_put(_POINT_MEMO, memo_key, {})
+            _memo_put(_POINT_MEMO, memo_key, {}, _POINT_STRUCT)
             return {}
 
         budget = [max_nodes]
@@ -464,7 +627,11 @@ class Polyhedron:
 
         found = dfs({})
         _memo_put(_POINT_MEMO, memo_key,
-                  dict(found) if found is not None else None)
+                  dict(found) if found is not None else None, _POINT_STRUCT)
+        if found is not None:
+            # negative results are budget-bounded, only found points are
+            # portable to looser siblings
+            _struct_add(_POINT_STRUCT, skey, consts, dict(found))
         return found
 
     def is_empty(self, max_nodes: int = 20000) -> bool:
@@ -484,18 +651,33 @@ class Polyhedron:
 
     # ------------------------------------------------------------ enumeration
     def bounding_box(self) -> Dict[str, Tuple[int, int]]:
-        """Per-variable integer bounds via FM projection; raises if unbounded."""
-        box: Dict[str, Tuple[int, int]] = {}
+        """Per-variable integer bounds via FM projection; raises if unbounded.
+
+        Memoized on the canonical form (FM projection is exact over Q
+        whatever the elimination order, so the box is content-determined);
+        the persistent store keeps domain enumeration warm across runs.
+        """
         variables = self.vars()
+        cvars, cmat = self._canonical()
+        if cmat is None:
+            return {v: (0, -1) for v in variables}       # trivially empty
+        key = Polyhedron._memo_key(cvars, cmat)
+        hit, cached = _memo_get(_BOX_MEMO, key)
+        if hit:
+            return dict(cached)
+        box: Dict[str, Tuple[int, int]] = {}
         for var in variables:
             others = [w for w in variables if w != var]
             proj = self.project_out(others)
             if proj is None:
-                return {v: (0, -1) for v in variables}   # empty box
+                box = {v: (0, -1) for v in variables}    # empty box
+                _memo_put(_BOX_MEMO, key, dict(box))
+                return box
             lo, hi = self._var_bounds(proj.rows, var)
             if lo is None or hi is None:
                 raise ValueError(f"variable {var} unbounded; cannot enumerate")
             box[var] = (lo, hi)
+        _memo_put(_BOX_MEMO, key, dict(box))
         return box
 
     def enumerate_points(self, max_points: int = 2_000_000) -> List[Dict[str, int]]:

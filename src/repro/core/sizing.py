@@ -28,7 +28,9 @@ _NEG = -(10 ** 9)
 
 class SizingContext:
     """Per-process global timestamps + lex ranks, computed once and shared by
-    every channel-capacity query (and across PPNs sharing Process objects)."""
+    every channel-capacity query (and across PPNs sharing Process objects).
+    Timestamps/ranks come from the `Process` cache tiers, so a retiled sweep
+    recomputes only the tile coordinates and the composite rank."""
 
     #: total constructor calls — see ChannelClassifier.construction_count.
     construction_count = 0
@@ -37,14 +39,17 @@ class SizingContext:
         SizingContext.construction_count += 1
         self.ppn = ppn
         self._proc: Dict[str, Tuple[object, object, np.ndarray, np.ndarray]] = {}
+        self._pair: Dict[Tuple[str, str], Tuple[object, object, np.ndarray,
+                                                np.ndarray]] = {}
 
     def _proc_data(self, name: str):
         proc = self.ppn.processes[name]
         cached = self._proc.get(name)
         if cached is not None and cached[0] is proc:
             return cached
-        gts = proc.global_ts(proc.pts, self.ppn.params)
-        cached = (proc, proc.domain_index(), gts, _lex_rank(gts))
+        cached = (proc, proc.domain_index(),
+                  proc.global_ts(proc.pts, self.ppn.params),
+                  proc.global_rank(self.ppn.params))
         self._proc[name] = cached
         return cached
 
@@ -54,6 +59,128 @@ class SizingContext:
         rows = index.rows_of(pts)
         return gts[rows], rank[rows]
 
+    def pair_rank(self, prod_name: str, cons_name: str
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+        """JOINT dense lex ranks of both full domains under the global
+        schedule (shorter timestamps padded with ``_NEG``, as the occupancy
+        sweep has always compared them).  One ranking per process pair serves
+        every channel between the pair — including all its SPLIT parts — so
+        each capacity query below is pure integer arithmetic.
+
+        Three tiers, cheapest first:
+        1. self-pair — the joint rank IS the process rank;
+        2. disjoint leading constants (load → compute → store nests) — the
+           joint rank is the per-process ranks with the later process offset;
+        3. general — rank segment-compressed columns, reusing a sweep-cached
+           joint rank of the tiling-independent tail when the endpoints share
+           a tile depth, or the padded full-width matrices otherwise.
+        """
+        key = (prod_name, cons_name)
+        prod_data = self._proc_data(prod_name)
+        cons_data = self._proc_data(cons_name)
+        cached = self._pair.get(key)
+        if (cached is not None and cached[0] is prod_data[0]
+                and cached[1] is cons_data[0]):
+            return cached[2], cached[3]
+        prod, cons = prod_data[0], cons_data[0]
+        params = self.ppn.params
+        if prod is cons:                                       # tier 1
+            jp = jc = prod_data[3]
+        elif prod._custom_ts("global_ts") or cons._custom_ts("global_ts"):
+            # overridden timestamps: no segment structure to exploit
+            jp, jc = self._joint_full(prod_data[2], cons_data[2])
+        else:
+            p_lo, p_hi = prod.c0_range(params)
+            c_lo, c_hi = cons.c0_range(params)
+            rank_p, rank_c = prod_data[3], cons_data[3]
+            if p_hi < c_lo:                                    # tier 2
+                jp = rank_p
+                jc = rank_c + (int(rank_p.max()) + 1 if len(rank_p) else 0)
+            elif c_hi < p_lo:
+                jc = rank_c
+                jp = rank_p + (int(rank_c.max()) + 1 if len(rank_c) else 0)
+            else:                                              # tier 3
+                jp, jc = self._joint_rank(prod, cons, prod_data[2],
+                                          cons_data[2])
+        self._pair[key] = (prod, cons, jp, jc)
+        return jp, jc
+
+    def _joint_full(self, wts: np.ndarray, rts: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        width = max(wts.shape[1], rts.shape[1])
+        joint = np.concatenate([_pad(wts, width), _pad(rts, width)], axis=0)
+        jrank = _lex_rank(joint)
+        return jrank[:len(wts)], jrank[len(wts):]
+
+    def _joint_rank(self, prod, cons, wts: np.ndarray, rts: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        params = self.ppn.params
+        n_p, n_c = prod.tile_depth, cons.tile_depth
+        if n_p != n_c:
+            return self._joint_full(wts, rts)
+        # aligned segments (c0 | φ… | rest): replace the tiling-independent
+        # rest by its sweep-cached joint rank and rank the narrow composite
+        # per configuration
+        rest_p, rest_c = self._joint_rest_rank(prod, cons)
+        cols_p = [prod._base_global(params)[:, :1], rest_p[:, None]]
+        cols_c = [cons._base_global(params)[:, :1], rest_c[:, None]]
+        if n_p:
+            cols_p.insert(1, prod.domain_tile_coords(params))
+            cols_c.insert(1, cons.domain_tile_coords(params))
+        joint = np.concatenate([np.concatenate(cols_p, axis=1),
+                                np.concatenate(cols_c, axis=1)], axis=0)
+        jrank = _lex_rank(joint)
+        return jrank[:len(wts)], jrank[len(wts):]
+
+    def _joint_rest_rank(self, prod, cons) -> Tuple[np.ndarray, np.ndarray]:
+        """Joint lex rank of the two processes' untiled global-timestamp
+        tails — tiling-independent, cached for the lifetime of the sweep on
+        the producer's base tier."""
+        params = self.ppn.params
+        store = prod.pair_cache(params)
+        cached = store.get(cons.name)
+        if cached is not None and cached[0] is cons.pts:
+            return cached[1], cached[2]
+        rest_p = prod._base_global(params)[:, 1:]
+        rest_c = cons._base_global(params)[:, 1:]
+        width = max(rest_p.shape[1], rest_c.shape[1])
+        joint = np.concatenate([_pad(rest_p, width), _pad(rest_c, width)],
+                               axis=0)
+        jrank = _lex_rank(joint)
+        out = (jrank[:len(rest_p)], jrank[len(rest_p):])
+        store[cons.name] = (cons.pts, out[0], out[1])
+        return out
+
+    def rows_of(self, proc_name: str, pts: np.ndarray) -> np.ndarray:
+        return self._proc_data(proc_name)[1].rows_of(pts)
+
+
+def _pad(ts: np.ndarray, width: int) -> np.ndarray:
+    if ts.shape[1] < width:
+        ts = np.concatenate(
+            [ts, np.full((len(ts), width - ts.shape[1]), _NEG,
+                         dtype=np.int64)], axis=1)
+    return ts
+
+
+def _value_groups(c: Channel, w_rows: np.ndarray
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-value edge grouping of a channel: ``(value write rows, edge
+    permutation sorted by value, group start offsets)``.  Groups are keyed by
+    producer DOMAIN ROW (a unique per-instance label), which makes them a
+    property of the dataflow relation alone — cached on the tiling-shared
+    Channel object, they survive every configuration of a sweep."""
+    cached = c.__dict__.get("_value_groups")
+    if cached is not None and cached[0] is c.src_pts:
+        return cached[1]
+    perm = np.argsort(w_rows, kind="stable")
+    sorted_rows = w_rows[perm]
+    starts = np.concatenate(
+        [[0], np.flatnonzero(sorted_rows[1:] != sorted_rows[:-1]) + 1])
+    groups = (sorted_rows[starts], perm, starts)
+    c.__dict__["_value_groups"] = (c.src_pts, groups)
+    return groups
+
 
 def _channel_capacity(ppn: PPN, c: Channel,
                       context: Optional[SizingContext] = None) -> int:
@@ -61,39 +188,26 @@ def _channel_capacity(ppn: PPN, c: Channel,
         return 0
     ctx = context if context is not None else SizingContext(ppn)
     ctx.ppn = ppn
-    wts, _ = ctx.ts_and_rank(c.producer, c.src_pts)
-    rts, r_rank = ctx.ts_and_rank(c.consumer, c.dst_pts)
-    width = max(wts.shape[1], rts.shape[1])
-
-    def pad(ts: np.ndarray) -> np.ndarray:
-        if ts.shape[1] < width:
-            ts = np.concatenate(
-                [ts, np.full((len(ts), width - ts.shape[1]), _NEG,
-                             dtype=np.int64)], axis=1)
-        return ts
-
-    wts, rts = pad(wts), pad(rts)
+    # Joint producer/consumer ranks replace the padded-timestamp comparisons:
+    # everything below is integer arithmetic over dense ranks, with the only
+    # lexicographic sort amortized per process pair in `pair_rank`.
+    jp, jc = ctx.pair_rank(c.producer, c.consumer)
+    w_rows = ctx.rows_of(c.producer, c.src_pts)
+    r_rows = ctx.rows_of(c.consumer, c.dst_pts)
+    r_rank = jc[r_rows]
     # A value occupies the channel from its write to its LAST read
-    # (multiplicity keeps it live).  Group edges by producer instance; the
-    # last read is the grouped lex-max, i.e. the max consumer rank (padding
-    # appends equal columns so ranks still order the padded rows).
-    _, inv = np.unique(c.src_pts, axis=0, return_inverse=True)
-    order = np.lexsort((r_rank, inv))
-    group_end = np.concatenate([inv[order][1:] != inv[order][:-1], [True]])
-    last_edge = order[group_end]              # one edge per value, max read
-    write_ts = wts[last_edge]                 # same write row for all edges
-    last_read = rts[last_edge]                # of a value ⇒ any representative
-    # Sweep: +1 at write, -1 after last read.  Reads at a timestamp happen
-    # before writes at the same timestamp (operand read precedes result write).
-    ev_ts = np.concatenate([write_ts, last_read], axis=0)
-    n_vals = len(last_edge)
-    tag = np.concatenate([np.ones(n_vals, dtype=np.int64),
-                          np.zeros(n_vals, dtype=np.int64)])
-    delta = np.concatenate([np.ones(n_vals, dtype=np.int64),
-                            -np.ones(n_vals, dtype=np.int64)])
-    keys = (tag,) + tuple(ev_ts[:, j] for j in range(width - 1, -1, -1))
-    ev_order = np.lexsort(keys)
-    occupancy = np.cumsum(delta[ev_order])
+    # (multiplicity keeps it live): segment-max of the read ranks over the
+    # cached per-value grouping.
+    value_rows, perm, starts = _value_groups(c, w_rows)
+    w_ev = jp[value_rows]
+    r_ev = np.maximum.reduceat(r_rank[perm], starts)
+    # Sweep: +1 at write, -1 after last read, reads draining before writes at
+    # the same timestamp (operand read precedes result write) — so the event
+    # key is 2·rank + (1 if write).  Ranks are dense, so a counting sweep
+    # (bincount + running sum) replaces the event sort outright.
+    span = 2 * max(int(w_ev.max()), int(r_ev.max())) + 2
+    occupancy = np.cumsum(np.bincount(2 * w_ev + 1, minlength=span)
+                          - np.bincount(2 * r_ev, minlength=span))
     return int(max(0, occupancy.max()))
 
 

@@ -38,6 +38,21 @@ class NotApplicable(Exception):
     'If not, the next channel →c is considered')."""
 
 
+def _endpoint_rows_and_phi(ppn: PPN, proc_name: str, pts: np.ndarray):
+    """(domain rows or None, φ) of channel endpoints.  Endpoints that lie on
+    the process domain (always, for dataflow-built channels) gather the
+    memoized per-domain φ through the memoized row lookup — in a tile sweep
+    this reuses work across the classify/fifoize/size stages AND across
+    configurations; synthetic off-domain endpoints fall back to a direct
+    tile-coordinate evaluation."""
+    proc = ppn.processes[proc_name]
+    try:
+        rows = proc.domain_index().rows_of(pts)
+    except KeyError:
+        return None, proc.tiling.tile_coords_of(pts)
+    return rows, proc.domain_tile_coords(ppn.params)[rows]
+
+
 def split_channel(ppn: PPN, c: Channel) -> List[Channel]:
     """SPLIT on the edge-list form: partition edges by the first depth at
     which producer/consumer tile coordinates differ."""
@@ -48,8 +63,8 @@ def split_channel(ppn: PPN, c: Channel) -> List[Channel]:
     if prod.tiling.n != cons.tiling.n:
         raise NotApplicable(f"{c.name}: endpoint tilings must share depth")
     n = prod.tiling.n
-    sphi = prod.tiling.tile_coords_of(c.src_pts)      # E × n
-    dphi = cons.tiling.tile_coords_of(c.dst_pts)
+    src_rows, sphi = _endpoint_rows_and_phi(ppn, c.producer, c.src_pts)  # E × n
+    dst_rows, dphi = _endpoint_rows_and_phi(ppn, c.consumer, c.dst_pts)
     diff = sphi != dphi
     first = np.where(diff.any(axis=1), diff.argmax(axis=1), n)   # 0-based; n ⇒ same tile
     # Coverage: the ≪¹..≪ⁿ/≈ⁿ pieces only cover θP(x) ⪯ θC(y); a dependence
@@ -66,8 +81,15 @@ def split_channel(ppn: PPN, c: Channel) -> List[Channel]:
         mask = first == k
         if not mask.any():
             continue          # drop empty parts
-        parts.append(replace(c, src_pts=c.src_pts[mask], dst_pts=c.dst_pts[mask],
-                             depth=k + 1))
+        part = replace(c, src_pts=c.src_pts[mask], dst_pts=c.dst_pts[mask],
+                       depth=k + 1)
+        # parts slice their parent's already-resolved domain rows — seed the
+        # lookup memo so classifying/sizing the parts skips the row search
+        if src_rows is not None:
+            prod.domain_index().prime(part.src_pts, src_rows[mask])
+        if dst_rows is not None:
+            cons.domain_index().prime(part.dst_pts, dst_rows[mask])
+        parts.append(part)
     return parts
 
 
@@ -135,15 +157,20 @@ def split_by_tile_pair(ppn: PPN, ch: Channel) -> List[Channel]:
     cons = ppn.processes[ch.consumer]
     if prod.tiling is None or cons.tiling is None:
         raise NotApplicable(ch.name)
-    sphi = prod.tiling.tile_coords_of(ch.src_pts)
-    dphi = cons.tiling.tile_coords_of(ch.dst_pts)
+    src_rows, sphi = _endpoint_rows_and_phi(ppn, ch.producer, ch.src_pts)
+    dst_rows, dphi = _endpoint_rows_and_phi(ppn, ch.consumer, ch.dst_pts)
     keys = np.concatenate([sphi, dphi], axis=1)
     uniq, inv = np.unique(keys, axis=0, return_inverse=True)
     parts = []
     for g in range(len(uniq)):
         mask = inv == g
-        parts.append(replace(ch, src_pts=ch.src_pts[mask],
-                             dst_pts=ch.dst_pts[mask], depth=g + 1))
+        part = replace(ch, src_pts=ch.src_pts[mask],
+                       dst_pts=ch.dst_pts[mask], depth=g + 1)
+        if src_rows is not None:
+            prod.domain_index().prime(part.src_pts, src_rows[mask])
+        if dst_rows is not None:
+            cons.domain_index().prime(part.dst_pts, dst_rows[mask])
+        parts.append(part)
     return parts
 
 

@@ -1,0 +1,149 @@
+"""Incremental tile-sweep engine: many tilings, one analysis' worth of work.
+
+The paper's central observation is that FIFO recoverability is a function of
+the chosen loop tiling — which makes "same kernel, many tilings" the analysis
+engine's hottest realistic workload (tile-size selection is a first-class
+design-space-exploration problem in HLS practice).  Naively that costs a full
+`analyze(case)` per configuration; almost all of it is tiling-independent.
+
+`sweep` runs the staged driver once per configuration through
+`Analysis.retile`, reusing the PPN (dataflow relation + domains), the
+`DomainIndex` row lookups, and the per-process base timestamps/lex ranks
+across every configuration.  Reports are identical to a fresh `analyze()`
+per tiling — the sweep is pure amortization (asserted field-for-field, modulo
+the execution-diagnostics ``cache`` field, in `tests/test_sweep.py` and
+enforced by `benchmarks/bench_sweep.py`).
+
+`sweep_parallel` fans a list of `SweepJob`s out over a process pool (one
+worker per kernel by default) and merges each worker's polyhedron verdict
+cache back into the parent, so a subsequent `save_polyhedron_cache` persists
+the union — repeated benchmark/CI runs start warm.
+"""
+from __future__ import annotations
+
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import dataclass
+from typing import (Any, Dict, List, Mapping, Optional, Sequence, Tuple,
+                    Union)
+
+from .analysis import Analysis, AnalysisReport, analyze
+from .dataflow import Kernel
+from .polyhedron import export_polyhedron_cache, merge_polyhedron_cache
+from .ppn import PPN
+from .tiling import Tiling
+
+#: stages `sweep` runs per configuration, in order (the paper's flow)
+DEFAULT_STAGES: Tuple[str, ...] = ("classify", "fifoize", "size")
+
+#: report fields that describe the execution rather than the analysis —
+#: excluded from identity comparisons (cache hit counts are global process
+#: state and differ even between two fresh `analyze()` runs)
+DIAGNOSTIC_FIELDS: Tuple[str, ...] = ("cache",)
+
+
+def report_payload(report: Union[AnalysisReport, Mapping[str, Any]]
+                   ) -> Dict[str, Any]:
+    """A report as a dict with execution diagnostics stripped — the value two
+    runs of the same analysis must agree on byte-for-byte."""
+    doc = report.as_dict() if isinstance(report, AnalysisReport) else dict(report)
+    for k in DIAGNOSTIC_FIELDS:
+        doc.pop(k, None)
+    return doc
+
+
+def _run_stages(a: Analysis, stages: Sequence[str], pow2: bool,
+                topology: str) -> Analysis:
+    for stage in stages:
+        if stage == "classify":
+            a = a.classify()
+        elif stage == "fifoize":
+            a = a.fifoize()
+        elif stage == "size":
+            a = a.size(pow2=pow2)
+        elif stage == "plan":
+            a = a.plan(topology=topology)
+        else:
+            raise ValueError(f"unknown sweep stage {stage!r}")
+    return a
+
+
+def sweep(kernel: Union[Kernel, PPN, Any],
+          tilings: Sequence[Mapping[str, Tiling]],
+          params: Optional[Mapping[str, int]] = None,
+          *,
+          stages: Sequence[str] = DEFAULT_STAGES,
+          pow2: bool = True,
+          topology: str = "sequential") -> List[AnalysisReport]:
+    """Analyze one kernel under every tiling configuration in ``tilings``.
+
+    ``kernel`` is anything `analyze` accepts (a `Kernel`, a prebuilt `PPN`,
+    or a polybench `KernelCase` — the case's own tiling is ignored here; the
+    swept configurations come from ``tilings``).  Each configuration maps
+    process names to `Tiling`s exactly like `PPN.from_kernel`; unmapped
+    processes are untiled.  Returns one `AnalysisReport` per configuration,
+    in order, each identical to a fresh ``analyze(kernel, tilings=cfg)``
+    running the same stages.
+    """
+    if hasattr(kernel, "kernel") and hasattr(kernel, "tilings"):
+        kernel = kernel.kernel          # a KernelCase; sweep supplies tilings
+    base = analyze(kernel, params=params)      # dataflow oracle runs ONCE
+    reports: List[AnalysisReport] = []
+    for cfg in tilings:
+        a = _run_stages(base.retile(cfg), stages, pow2, topology)
+        reports.append(a.report())
+    return reports
+
+
+# ------------------------------------------------------- process-pool driver
+
+@dataclass(frozen=True)
+class SweepJob:
+    """One worker's unit: a registered polybench kernel + its configurations.
+    (Keyed by registry name so only small, picklable specs cross the pool.)"""
+
+    kernel: str
+    tilings: Tuple[Mapping[str, Tiling], ...]
+    scale: int = 1
+    stages: Tuple[str, ...] = DEFAULT_STAGES
+    pow2: bool = True
+    topology: str = "sequential"
+
+
+def run_job(job: SweepJob) -> List[Dict[str, Any]]:
+    """Execute one job in-process; reports as plain dicts (JSON/pickle-safe)."""
+    from .polybench import get
+    case = get(job.kernel, job.scale)
+    reports = sweep(case.kernel, job.tilings, stages=job.stages,
+                    pow2=job.pow2, topology=job.topology)
+    return [r.as_dict() for r in reports]
+
+
+def _pool_worker(payload) -> Tuple[int, List[Dict[str, Any]], Dict]:
+    index, job = payload
+    return index, run_job(job), export_polyhedron_cache()
+
+
+def sweep_parallel(jobs: Sequence[SweepJob],
+                   max_workers: Optional[int] = None,
+                   share_cache: bool = True) -> List[List[Dict[str, Any]]]:
+    """Run ``jobs`` over a process pool; returns per-job report lists in job
+    order.  Each worker seeds its polyhedron cache from the parent's (once,
+    via the pool initializer) and the parent merges every worker's cache
+    back afterwards, so sweeping in parallel leaves the parent exactly as
+    warm as sweeping serially — and a following `save_polyhedron_cache`
+    persists the union.  Reports are unchanged by parallelism (each job is
+    computed independently)."""
+    if not jobs:
+        return []
+    init, initargs = None, ()
+    if share_cache:
+        init, initargs = merge_polyhedron_cache, (export_polyhedron_cache(),)
+    out: List[Optional[List[Dict[str, Any]]]] = [None] * len(jobs)
+    with ProcessPoolExecutor(max_workers=max_workers, initializer=init,
+                             initargs=initargs) as pool:
+        for index, reports, worker_cache in pool.map(
+                _pool_worker, list(enumerate(jobs))):
+            out[index] = reports
+            if share_cache:
+                merge_polyhedron_cache(worker_cache)
+    return out

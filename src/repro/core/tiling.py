@@ -77,8 +77,32 @@ class Tiling:
         phis, cons = self.tile_coord_exprs(base.dims, phi_prefix)
         return phis + list(base.exprs), cons
 
+    def with_sizes(self, sizes: Sequence[int]) -> "Tiling":
+        """Same hyperplanes (normals + offsets), different tile sizes — the
+        unit of variation a tile-size sweep explores."""
+        return Tiling(self.normals, tuple(int(b) for b in sizes),
+                      self.offsets)
+
 
 def rectangular(dim_count: int, sizes: Sequence[int]) -> Tiling:
     normals = tuple(tuple(1 if j == k else 0 for j in range(dim_count))
                     for k in range(len(sizes)))
     return Tiling(normals, tuple(sizes))
+
+
+def rescale_tilings(tilings: Mapping[str, Tiling], b: int, base: int = 4
+                    ) -> Dict[str, Tiling]:
+    """A tiling assignment with every size rescaled by ``b / base`` (floored,
+    min 1): size ``base`` becomes ``b``, ``2·base`` becomes ``2·b``, … — so a
+    kernel's reference tiling (the polybench cases use ``base=4``) generates
+    a whole tile-size sweep while keeping relative shapes (e.g. heat-3d's
+    2×-time hyperplanes) and per-statement offsets intact."""
+    return {name: t.with_sizes(max(1, s * b // base) for s in t.sizes)
+            for name, t in tilings.items()}
+
+
+def unit_tilings(tilings: Mapping[str, Tiling]) -> Dict[str, Tiling]:
+    """The degenerate 1×…×1 assignment of the same hyperplanes (every point
+    its own tile) — the sweep's boundary configuration."""
+    return {name: t.with_sizes(1 for _ in t.sizes)
+            for name, t in tilings.items()}
