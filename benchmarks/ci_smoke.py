@@ -1,18 +1,23 @@
-"""CI smoke benchmark: table2 subset + tile-sweep engine, with guards.
+"""CI smoke benchmark: table2 subset + tile-sweep engine + operational
+validation, with guards.
 
     PYTHONPATH=src python -m benchmarks.ci_smoke
 
-Three sections, in order:
+Four sections, in order:
 
 1. **Sweep smoke** (cold caches): for gemm / jacobi-1d / seidel-2d × 3 tile
    sizes, the sweep engine must produce reports identical to a fresh
    `analyze()` per tiling and finish within ``SWEEP_BUDGET`` (0.6×) of the
    naive per-tiling loop — the amortization regression guard.  Runs FIRST so
    no disk-warmed cache can distort the ratio.
-2. **Persistent store**: if ``REPRO_POLY_CACHE`` is set (CI wires it to an
+2. **Validate smoke**: `Analysis.validate()` on the same 3 kernels, pre- AND
+   post-FIFOIZE — every verdict replayed on the runtime simulator (positive
+   and negative directions) and peak occupancy checked against `size()`
+   slots, within ``VALIDATE_BUDGET`` of the analysis it checks.
+3. **Persistent store**: if ``REPRO_POLY_CACHE`` is set (CI wires it to an
    `actions/cache` path), the verdict store is loaded here — warming the
    domain-enumeration boxes for the next section — and saved again at exit.
-3. **Table2 subset**: classifications must match the recorded
+4. **Table2 subset**: classifications must match the recorded
    BENCH_table2.json rows exactly and stay within GUARD_FACTOR of the
    recorded wall-clock.
 """
@@ -37,6 +42,9 @@ GUARD_FACTOR = 4.0
 
 SWEEP_SIZES = (2, 4, 6)
 SWEEP_BUDGET = 0.6        # sweep must cost ≤ 0.6× the naive per-tiling loop
+
+VALIDATE_BUDGET = 1.5     # validate() must cost ≤ 1.5× the analysis itself
+                          # (measured ~0.4× — vectorized trace replays)
 
 BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_table2.json"
 CACHE_ENV = "REPRO_POLY_CACHE"
@@ -74,6 +82,37 @@ def sweep_smoke(failures: list) -> None:
                         f"{SWEEP_BUDGET}x naive loop ({total_naive:.3f}s)")
 
 
+def validate_smoke(failures: list) -> None:
+    from repro.runtime import ValidationError
+
+    t_an = t_val = 0.0
+    replays = rejections = 0
+    for name in KERNELS:
+        case = get(name)
+        t0 = time.perf_counter()
+        base = analyze(case).classify()
+        pre = base.size(pow2=True)
+        post = base.fifoize().size(pow2=True)
+        t_an += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for a in (pre, post):
+            try:
+                v = a.validate().validation
+                replays += v.replays
+                rejections += v.rejections
+            except ValidationError as e:
+                failures.append(f"validate/{name}: {e}")
+        t_val += time.perf_counter() - t0
+    ratio = t_val / t_an
+    status = "ok" if ratio <= VALIDATE_BUDGET else "SLOW"
+    print(f"validate smoke  {replays} replays {rejections} rejections  "
+          f"analysis {t_an*1e3:7.1f}ms validate {t_val*1e3:7.1f}ms "
+          f"ratio {ratio:.2f} (budget {VALIDATE_BUDGET}) {status}")
+    if ratio > VALIDATE_BUDGET:
+        failures.append(f"validate: {t_val:.3f}s exceeds {VALIDATE_BUDGET}x "
+                        f"the analysis time ({t_an:.3f}s)")
+
+
 def table2_smoke(failures: list) -> None:
     doc = json.loads(BENCH_PATH.read_text())
     recorded = {r["kernel"]: r for r in doc["optimized"]}
@@ -99,14 +138,16 @@ def main() -> int:
     # 1. sweep guard first — it clears caches, so it must not see (or wipe)
     #    the persistent store
     sweep_smoke(failures)
-    # 2. warm start for the remaining sections, refreshed on the way out
+    # 2. operational validation of the same kernels, pre- and post-FIFOIZE
+    validate_smoke(failures)
+    # 3. warm start for the remaining sections, refreshed on the way out
     cache_path = os.environ.get(CACHE_ENV)
     if cache_path:
         clear_polyhedron_cache()
         print(f"persistent store: loaded "
               f"{load_polyhedron_cache(cache_path)} entries "
               f"from {cache_path}")
-    # 3. table2 classification + timing guard
+    # 4. table2 classification + timing guard
     table2_smoke(failures)
     if cache_path and not failures:
         print(f"persistent store: saved "

@@ -4,6 +4,9 @@
 #     python -m benchmarks.run --smoke    # CI subset: 3-kernel table2 rows
 #                                         # via the Analysis driver + the
 #                                         # pipeline planner (fast, no jax)
+#     ... --smoke --validate              # + operational validation: replay
+#                                         # every verdict on the runtime
+#                                         # simulator, per-channel occupancy
 from __future__ import annotations
 
 import argparse
@@ -15,7 +18,28 @@ def _emit(name: str, us: float, derived: str = "") -> None:
     sys.stdout.flush()
 
 
-def smoke() -> None:
+def validate_kernels(kernels) -> None:
+    """`Analysis.validate()` per kernel (post-FIFOIZE): print the verdict /
+    occupancy confirmation for every channel."""
+    import time
+
+    from repro.core import analyze
+    from repro.core.polybench import get
+
+    for kernel in kernels:
+        sized = analyze(get(kernel)).classify().fifoize().size(pow2=True)
+        t0 = time.perf_counter()          # time the replay alone, so the
+        a = sized.validate()              # row is comparable to ci_smoke's
+        dt = time.perf_counter() - t0     # validate/analysis ratio
+        v = a.validation
+        _emit(f"validate/{kernel}", dt * 1e6,
+              f"{v.replays} replays {v.rejections} rejections ok")
+        for row in v.channels:
+            print(f"#   {row.name:36s} {row.verdict:22s} -> {row.lowering:22s}"
+                  f" peak {row.peak:4d} <= {row.slots:4d} slots")
+
+
+def smoke(validate: bool = False) -> None:
     from . import pipeline_comm, table2_fifo
 
     print("name,us_per_call,derived")
@@ -24,6 +48,8 @@ def smoke() -> None:
         _emit(f"table2/{r['kernel']}", r["seconds"] * 1e6,
               f"fifo {r['fifo_before']}/{r['channels_before']} -> "
               f"{r['fifo_after']}/{r['channels_after']}")
+    if validate:
+        validate_kernels(("gemm", "jacobi-1d", "seidel-2d"))
     pipeline_comm.main(_emit)
 
 
@@ -44,7 +70,14 @@ if __name__ == '__main__':
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset exercising the public Analysis API")
-    if ap.parse_args().smoke:
-        smoke()
+    ap.add_argument("--validate", action="store_true",
+                    help="replay every verdict on the runtime simulator and "
+                         "print per-channel occupancy confirmation")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke(validate=args.validate)
     else:
         main()
+        if args.validate:
+            from repro.core.polybench import kernel_names
+            validate_kernels(kernel_names())

@@ -19,7 +19,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 
-def paper_demo():
+def paper_demo(validate: bool = False):
     from repro.core.analysis import analyze
     from repro.core.polybench import jacobi_1d_paper
 
@@ -39,6 +39,18 @@ def paper_demo():
         print(f"  {c.name:32s} {sized.patterns[c.name].value:8s} "
               f"buffer={sized.sizes[c.name]}")
     print(sized.report().summary())
+    if validate:
+        # operational check: replay every verdict on the runtime simulator
+        # (a FIFO verdict must pop in order, a broken one must NOT), and
+        # confirm peak occupancy fits the planned buffers
+        v = sized.validate().validation
+        print("validate (trace replay on the reference backend):")
+        for row in v.channels:
+            rej = f", rejected {list(row.rejected)}" if row.rejected else ""
+            print(f"  {row.name:32s} {row.verdict:8s} confirmed on "
+                  f"{row.lowering}: peak {row.peak} <= {row.slots} "
+                  f"slots{rej}")
+        print(v.summary())
 
 
 def train_demo(arch: str, steps: int, ckpt: str):
@@ -70,7 +82,10 @@ if __name__ == "__main__":
     ap.add_argument("--ckpt", default="/tmp/repro_quickstart_ckpt")
     ap.add_argument("--paper-only", action="store_true",
                     help="run only the paper demo (CPU, no training) — CI")
+    ap.add_argument("--validate", action="store_true",
+                    help="operationally validate every verdict and buffer "
+                         "size on the runtime simulator")
     args = ap.parse_args()
-    paper_demo()
+    paper_demo(validate=args.validate)
     if not args.paper_only:
         train_demo(args.arch, args.steps, args.ckpt)

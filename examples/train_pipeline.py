@@ -4,10 +4,10 @@
         PYTHONPATH=src python examples/train_pipeline.py
 
 The communication planner classifies the inter-stage channels of the chosen
-schedule with the paper's algorithm; the runtime lowers FIFO verdicts to
-`lax.ppermute` streams (vs. the all-gather reorder-buffer baseline) and
-trains a stacked-MLP model across 4 pipeline stages, checking against the
-non-pipelined reference.
+schedule with the paper's algorithm and emits `ChannelPlan` records; the
+runtime selects the collective implementation from those records through the
+shared lowering registry (`repro.runtime`) and trains a stacked-MLP model
+across 4 pipeline stages, checking against the non-pipelined reference.
 """
 import sys
 
@@ -22,18 +22,19 @@ from repro.comm.pipeline import pipeline_train_step
 
 
 def main():
+    from jax.sharding import Mesh
+
     n_dev = len(jax.devices())
     S = min(4, n_dev)
-    mesh = jax.make_mesh((S,), ("pipe",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = Mesh(np.array(jax.devices())[:S], ("pipe",))
     M, mb, D = 8, 4, 32
 
     print("=== planner verdicts (paper's classifier on the schedule) ===")
     _, plans = analyze_pipeline(PipelineSpec(stages=S, microbatches=M))
     print(plan_report(plans))
-    use_fifo = all(p.is_cheap for p in plans)
-    print(f"→ lowering inter-stage channels as "
-          f"{'ppermute FIFO streams' if use_fifo else 'reorder buffers'}\n")
+    from repro.comm.pipeline import ring_lowering
+    print(f"→ registry selects {ring_lowering(plans)!r} for the "
+          f"inter-stage ring\n")
 
     def stage_fn(p, h):
         return jnp.tanh(h @ p["w"] + p["b"])
@@ -48,12 +49,11 @@ def main():
     tgt = jax.random.normal(jax.random.PRNGKey(1), (M, mb, D)) * 0.1
 
     step = pipeline_train_step(stage_fn, loss_head, mesh, "pipe",
-                               fifo=use_fifo, lr=0.05)
-    with jax.set_mesh(mesh):
-        for i in range(30):
-            params, loss = step(params, xs, tgt)
-            if i % 5 == 0:
-                print(f"step {i:3d} pipeline loss {float(loss):.5f}")
+                               plans=plans, lr=0.05)
+    for i in range(30):
+        params, loss = step(params, xs, tgt)
+        if i % 5 == 0:
+            print(f"step {i:3d} pipeline loss {float(loss):.5f}")
     print("done — loss decreased across", S, "pipeline stages")
 
 

@@ -3,7 +3,9 @@ as a production JAX training/serving framework.
 
 Layers:
     repro.core       the paper's algorithm (PPN, classifier, SPLIT/FIFOIZE)
-    repro.comm       communication planner: FIFO→ppermute, else reorder buffer
+    repro.runtime    channel-lowering IR + registry, trace simulator,
+                     Analysis.validate() (operational verdict checks)
+    repro.comm       communication planner; lowerings via repro.runtime
     repro.models     the 10 assigned architectures (+ paper's own kernels)
     repro.configs    selectable configs (--arch <id>)
     repro.data/optim/train/serve/checkpoint   distributed substrate

@@ -1,12 +1,15 @@
-"""Runtime channel lowerings, selected by the planner's verdicts.
+"""JAX collective primitives behind the ``"jax"`` lowering backend.
 
-* `fifo_shift` — the FIFO stream: one `lax.ppermute` hop to the next stage.
-  Cheap: a single neighbor link transfer, double-buffered by XLA.
-* `reorder_buffer_read` — the addressable-buffer fallback for out-of-order
-  channels: every stage's value is all-gathered and the consumer dynamically
-  indexes what it needs.  This is the expensive lowering the paper's
-  algorithm exists to avoid; it is implemented (and benchmarked) as the
-  baseline.
+These are the raw transfers `repro.runtime.jax_backend` registers against
+the lowering vocabulary (which lowering uses which primitive is the
+registry's business, not encoded here):
+
+* `fifo_shift` — one `lax.ppermute` hop to the next stage.  Cheap: a single
+  neighbor link transfer, double-buffered by XLA.
+* `reorder_buffer_read` — every stage's value is all-gathered and the
+  consumer dynamically indexes what it needs.  This is the expensive
+  transfer the paper's algorithm exists to avoid; it is implemented (and
+  benchmarked) as the baseline.
 """
 from __future__ import annotations
 
@@ -16,9 +19,16 @@ import jax
 import jax.numpy as jnp
 
 
+def _axis_size(axis: str) -> int:
+    """Static size of a named mesh axis, across jax versions (`lax.axis_size`
+    is recent; `psum(1, axis)` constant-folds to the size everywhere)."""
+    size_fn = getattr(jax.lax, "axis_size", None)
+    return size_fn(axis) if size_fn is not None else jax.lax.psum(1, axis)
+
+
 def fifo_shift(x, axis: str, shift: int = 1, wrap: bool = False):
     """Send x to the next device along `axis` (FIFO neighbor stream)."""
-    n = jax.lax.axis_size(axis)
+    n = _axis_size(axis)
     if wrap:
         perm = [(i, (i + shift) % n) for i in range(n)]
     else:

@@ -1,37 +1,99 @@
-"""SPMD pipeline parallelism with planner-selected channel lowerings.
+"""SPMD pipeline parallelism with registry-selected channel lowerings.
 
-GPipe-style schedule over a `pipe` mesh axis inside `jax.shard_map`: stage
+GPipe-style schedule over a `pipe` mesh axis inside `shard_map`: stage
 parameters are sharded over the axis; microbatches stream through a rotating
-ppermute ring (the FIFO lowering the planner derives for the inter-stage
-activation channels).  Gradients flow through the transposed ppermute
-automatically under `jax.grad`.
+communication step whose implementation comes from the ``"jax"`` backend of
+the lowering registry (`repro.runtime.lowering`).  The step is selected from
+`ChannelPlan` records — pass the planner's output (`analyze_pipeline(spec)`)
+via ``plans=`` and the ring runs the cheapest lowering that serves every
+planned channel; `tests/test_pipeline_multidevice.py` measures the
+reorder-buffer alternative by forcing ``lowering=`` explicitly.  Gradients
+flow through the transposed collectives automatically under `jax.grad`.
 
-`fifo=False` lowers every channel as the paper's out-of-order fallback
-(all_gather reorder buffer) — the measured baseline for the benchmark
-`benchmarks/pipeline_comm.py`.
+The old ``fifo: bool`` toggle is deprecated (warn-once): it was a private
+re-encoding of the verdict→lowering table that now lives in the registry.
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Iterable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from .channels import fifo_shift, reorder_buffer_read
+from ..core.deprecation import warn_deprecated
+from ..runtime.lowering import (FIFO_STREAM, REORDER_BUFFER, backend,
+                                is_cheap)
+
+
+def _shard_map(fn, mesh: Mesh, in_specs, out_specs):
+    """`jax.shard_map` across jax versions (the kwarg disabling the
+    replication/varying-manual-axes check was renamed, and older releases
+    only ship the experimental entry point)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False)
+        except TypeError:
+            pass
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
+def ring_lowering(plans: Iterable) -> str:
+    """The single lowering a rotating ring needs to serve every planned
+    channel: the cheap ppermute stream iff every `ChannelPlan` record is a
+    stream (recovered splits included), else the reorder-buffer fallback.
+    Accepts plan objects or their `as_dict()` form."""
+    names = [p["lowering"] if isinstance(p, dict) else p.lowering
+             for p in plans]
+    return (FIFO_STREAM if all(is_cheap(n) for n in names)
+            else REORDER_BUFFER)
+
+
+def _resolve_lowering(lowering: Optional[str], plans, fifo) -> str:
+    if isinstance(lowering, bool):
+        # a pre-registry caller passing the old fifo flag positionally in
+        # the slot the lowering name now occupies — route to the shim
+        lowering, fifo = None, lowering
+    if fifo is not None:
+        warn_deprecated(
+            "comm.pipeline.fifo",
+            "the fifo: bool toggle is deprecated; pass plans=<ChannelPlan "
+            "records> (or lowering=<registry name>) so the implementation "
+            "comes from the shared lowering registry",
+            stacklevel=4)      # user -> pipeline_loss_fn -> here -> warn
+    # precedence matches the docstring: plan records, then an explicit
+    # registry name, then the deprecated flag
+    if plans is not None:
+        return ring_lowering(plans)
+    if lowering is not None:
+        return lowering
+    if fifo is not None:
+        return FIFO_STREAM if fifo else REORDER_BUFFER
+    return FIFO_STREAM
 
 
 def pipeline_loss_fn(stage_fn: Callable, loss_head: Callable, mesh: Mesh,
-                     axis: str = "pipe", fifo: bool = True):
+                     axis: str = "pipe", lowering: Optional[str] = None,
+                     *, plans=None, fifo: Optional[bool] = None):
     """Build loss(params_stacked, xs, targets) running the stage pipeline.
 
     stage_fn(stage_params, h) -> h           (one stage's computation)
     loss_head(h, target_mb) -> scalar        (applied at the last stage)
     params_stacked: pytree with leading dim = n_stages
     xs: (M, mb, …) microbatched inputs; targets: (M, …) per microbatch.
+
+    The inter-stage channel implementation is selected through the lowering
+    registry: from ``plans`` (`ChannelPlan` records, preferred), an explicit
+    ``lowering`` name, or the deprecated ``fifo`` flag.
     """
     n = mesh.shape[axis]
+    step = backend("jax").implementation(_resolve_lowering(lowering, plans,
+                                                           fifo))
 
     def inner(params, xs, targets):
         stage = jax.lax.axis_index(axis)
@@ -39,7 +101,10 @@ def pipeline_loss_fn(stage_fn: Callable, loss_head: Callable, mesh: Mesh,
         M = xs.shape[0]
         T = M + n - 1                        # pipeline ticks
         h = jnp.zeros_like(xs[0])
-        loss_acc = jnp.zeros((), jnp.float32)
+        # rank-1 (not scalar) and derived from xs: the pre-0.4.38 shard_map
+        # transpose assigns malformed axis names to rank-0 scan-carry
+        # cotangents, and mis-handles hoisted scalar constants
+        loss_acc = (jnp.sum(xs[0]) * 0.0).astype(jnp.float32)[None]
 
         def tick(carry, t):
             h, loss_acc = carry
@@ -55,32 +120,28 @@ def pipeline_loss_fn(stage_fn: Callable, loss_head: Callable, mesh: Mesh,
             mb_loss = loss_head(h_out, tgt)
             take = jnp.logical_and(stage == n - 1,
                                    jnp.logical_and(out_id >= 0, out_id < M))
-            loss_acc = loss_acc + jnp.where(take, mb_loss, 0.0)
-            # FIFO channel: stage s → s+1 neighbor stream
-            if fifo:
-                h_next = fifo_shift(h_out, axis, 1, wrap=True)
-            else:
-                # out-of-order fallback: addressable reorder buffer
-                prev = (stage - 1) % n
-                h_next = reorder_buffer_read(h_out, axis, prev)
+            # mask-multiply, not where(take, ., 0.0): see loss_acc note above
+            loss_acc = loss_acc + take.astype(mb_loss.dtype) * mb_loss
+            # stage s → s+1 channel: one registry-selected lowering step
+            h_next = step.step(h_out, axis, stage, n)
             return (h_next, loss_acc), None
 
         (h, loss_acc), _ = jax.lax.scan(tick, (h, loss_acc), jnp.arange(T))
         # every stage returns the (replicated) total loss
-        loss = jax.lax.psum(loss_acc, axis) / M
+        loss = jax.lax.psum(loss_acc[0], axis) / M
         return loss
 
-    specs_params = P(axis)
-    return jax.shard_map(inner, mesh=mesh,
-                         in_specs=(P(axis), P(), P()),
-                         out_specs=P(),
-                         check_vma=False)
+    return _shard_map(inner, mesh,
+                      in_specs=(P(axis), P(), P()),
+                      out_specs=P())
 
 
 def pipeline_train_step(stage_fn, loss_head, mesh: Mesh, axis: str = "pipe",
-                        fifo: bool = True, lr: float = 1e-2):
+                        lowering: Optional[str] = None, lr: float = 1e-2,
+                        *, plans=None, fifo: Optional[bool] = None):
     """SGD step on the pipelined loss (used by examples/tests)."""
-    loss_fn = pipeline_loss_fn(stage_fn, loss_head, mesh, axis, fifo)
+    loss_fn = pipeline_loss_fn(stage_fn, loss_head, mesh, axis, lowering,
+                               plans=plans, fifo=fifo)
 
     @jax.jit
     def step(params, xs, targets):

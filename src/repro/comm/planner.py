@@ -11,11 +11,11 @@ tiling in the paper: a Megatron-style depth-first consumer interleave breaks
 the producer's emission order, and splitting the channel per chunk restores
 per-channel FIFO order).
 
-Verdicts lower to JAX collectives (comm.channels):
-    FIFO                → lax.ppermute neighbor stream, pow2 double buffer
-    in-order+mult       → ppermute + local broadcast register
-    out-of-order        → addressable reorder buffer (all_gather + dynamic
-                          index), the expensive lowering the paper avoids
+Verdicts map to implementations through the lowering registry — the single
+verdict→lowering table is `repro.runtime.lowering.PATTERN_LOWERING`; the JAX
+collective implementations live in `repro.runtime.jax_backend` (primitives
+in `comm.channels`) and the trace-driven reference simulator in
+`repro.runtime.simulator`.
 """
 from __future__ import annotations
 
@@ -117,6 +117,15 @@ class _PipeProcess(Process):
     def local_ts(self, pts: np.ndarray, params) -> np.ndarray:
         t = _order(self._spec, self.stmt_rank, pts[:, 0], pts[:, 1])
         return t[:, None]
+
+    def global_ts(self, pts: np.ndarray, params) -> np.ndarray:
+        """(stage, interleaved order) — keeps the global timestamps coherent
+        with the overridden local order, so the runtime simulator's replay of
+        an (acyclic) pipeline PPN pops in the device's real execution order
+        instead of the affine expression's."""
+        t = _order(self._spec, self.stmt_rank, pts[:, 0], pts[:, 1])
+        rank = np.full((len(pts), 1), self.stmt_rank, dtype=np.int64)
+        return np.concatenate([rank, t[:, None]], axis=1)
 
 
 def analyze_pipeline(spec: PipelineSpec) -> Tuple[PPN, List[ChannelPlan]]:

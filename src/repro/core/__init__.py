@@ -10,8 +10,8 @@ Public API:
     polybench                       — the paper's 15-kernel benchmark suite
 """
 from .affine import Constraint, LinExpr, ceil_div, eq, floor_div, ge, gt, le, lt, v
-from .analysis import (Analysis, AnalysisContext, AnalysisReport, ChannelPlan,
-                       analyze)
+from .analysis import (SCHEMA_VERSION, Analysis, AnalysisContext,
+                       AnalysisReport, ChannelPlan, analyze)
 from .dataflow import Access, DepEdges, Kernel, Statement, direct_dependences
 from .deprecation import reset_deprecation_warnings
 from .patterns import (ChannelClassifier, Pattern, ProcSpace, classify_channel,
@@ -37,8 +37,9 @@ __all__ = [
     "AnalysisReport", "Channel", "ChannelClassifier", "ChannelPlan",
     "Constraint", "DepEdges", "DomainIndex", "FifoizeReport", "Kernel",
     "LinExpr", "NotApplicable", "PPN", "Pattern", "Polyhedron", "ProcSpace",
-    "Process", "Relation", "SizingContext", "Statement", "Tiling", "analyze",
-    "SweepJob", "ceil_div", "channel_capacity", "classify_channel",
+    "Process", "Relation", "SCHEMA_VERSION", "SizingContext", "Statement",
+    "Tiling", "analyze", "SweepJob", "ceil_div", "channel_capacity",
+    "classify_channel",
     "classify_channels", "classify_edges", "classify_symbolic",
     "clear_polyhedron_cache", "direct_dependences", "eq",
     "export_polyhedron_cache", "fifoize", "fifoize_relation", "floor_div",

@@ -6,7 +6,8 @@
               .classify()          # per-channel pattern (batched ranks)
               .fifoize()           # SPLIT + FIFOIZE (paper Fig. 2)
               .size(pow2=True)     # buffer capacities (paper §4)
-              .plan()              # lowering per channel (comm backend)
+              .plan()              # lowering IR per channel (runtime registry)
+              .validate()          # operational replay of every verdict
               .report())           # JSON-serializable artifact
 
 Each stage returns a NEW immutable `Analysis`; all of them share one
@@ -52,7 +53,8 @@ class AnalysisContext:
         self.counters: Dict[str, int] = {
             "classifier_builds": 0, "sizing_builds": 0,
             "classify_stages": 0, "fifoize_stages": 0,
-            "size_stages": 0, "plan_stages": 0, "retiles": 0,
+            "size_stages": 0, "plan_stages": 0, "validate_stages": 0,
+            "retiles": 0,
         }
 
     def classifier(self, ppn: PPN) -> ChannelClassifier:
@@ -72,14 +74,11 @@ class AnalysisContext:
 
 @dataclass
 class ChannelPlan:
-    """Lowering decision for one channel (comm backend terms).
-
-    Lowerings (cheapest first, cf. comm/planner module docs):
-        ppermute                → FIFO neighbor stream, pow2 double buffer
-        ppermute(depth-split)   → paper SPLIT recovered all-FIFO parts
-        ppermute(chunk-split)   → beyond-paper per-tile-pair split succeeded
-        ppermute+register       → in-order but multicast (local broadcast)
-        reorder-buffer          → out-of-order; addressable buffer
+    """One channel's backend-neutral lowering record — the unit of the
+    lowering IR.  ``lowering`` is drawn from the vocabulary in
+    `repro.runtime.lowering` (the single verdict→lowering table lives
+    there); both backends — the trace-driven reference simulator and the
+    JAX collectives — consume these records through the registry.
     """
 
     name: str
@@ -88,16 +87,31 @@ class ChannelPlan:
     parts: List[Tuple[int, str, int]]      # (depth, pattern, pow2 buffer size)
     lowering: str
     buffer_slots: int
+    topology: str = "sequential"           # capacity model the slots assume
 
     @property
     def is_cheap(self) -> bool:
-        return self.lowering.startswith("ppermute")
+        from ..runtime.lowering import is_cheap
+        return is_cheap(self.lowering)
+
+    def implementation(self, backend: str = "reference"):
+        """This plan's `ChannelLowering` on the named registry backend."""
+        from ..runtime.lowering import backend as _backend
+        return _backend(backend).implementation(self.lowering)
 
     def as_dict(self) -> Dict[str, Any]:
         return {"name": self.name, "pattern_before": self.pattern_before,
                 "split": self.split,
                 "parts": [list(p) for p in self.parts],
-                "lowering": self.lowering, "buffer_slots": self.buffer_slots}
+                "lowering": self.lowering, "buffer_slots": self.buffer_slots,
+                "topology": self.topology}
+
+
+#: `AnalysisReport` JSON format version.  Bump on any field change so
+#: downstream artifacts (BENCH_*.json, the CI cache, saved reports) can
+#: detect drift instead of mis-parsing.  v1 was the unversioned PR-2 format;
+#: v2 added ``schema_version``, ``validation`` and per-plan ``topology``.
+SCHEMA_VERSION = 2
 
 
 @dataclass
@@ -113,18 +127,40 @@ class AnalysisReport:
     total_slots: Optional[int]
     plans: Optional[List[Dict[str, Any]]]
     cache: Dict[str, Any]
+    validation: Optional[Dict[str, Any]] = None   # validate-stage evidence
+    schema_version: int = SCHEMA_VERSION
 
     def as_dict(self) -> Dict[str, Any]:
         return {
+            "schema_version": self.schema_version,
             "kernel": self.kernel, "params": dict(self.params),
             "stages": list(self.stages), "channels": self.channels,
             "fifoize": self.fifoize, "sizes_pow2": self.sizes_pow2,
             "total_slots": self.total_slots, "plans": self.plans,
+            "validation": self.validation,
             "cache": self.cache,
         }
 
     def to_json(self, **kwargs) -> str:
         return json.dumps(self.as_dict(), **kwargs)
+
+    @classmethod
+    def from_dict(cls, doc: Mapping[str, Any]) -> "AnalysisReport":
+        """Load a report emitted by `as_dict`/`to_json`, failing loudly on
+        format drift (missing or unknown ``schema_version``)."""
+        version = doc.get("schema_version")
+        if version != SCHEMA_VERSION:
+            raise ValueError(
+                f"AnalysisReport schema_version {version!r} does not match "
+                f"this build's {SCHEMA_VERSION} — regenerate the artifact "
+                f"(v1 is the pre-versioning format)")
+        return cls(**{f: doc[f] for f in (
+            "kernel", "params", "stages", "channels", "fifoize", "sizes_pow2",
+            "total_slots", "plans", "validation", "cache", "schema_version")})
+
+    @classmethod
+    def from_json(cls, text: str) -> "AnalysisReport":
+        return cls.from_dict(json.loads(text))
 
     def summary(self) -> str:
         n = len(self.channels)
@@ -159,6 +195,7 @@ class Analysis:
     sizes: Optional[Mapping[str, int]] = None
     sizes_pow2: Optional[bool] = None
     plans: Optional[Tuple[ChannelPlan, ...]] = None
+    validation: Optional[Any] = None       # runtime.validate.ValidationReport
 
     # ------------------------------------------------------------- stages --
 
@@ -236,19 +273,23 @@ class Analysis:
             szctx = self.ctx.sizing(self.ppn)
             cap = lambda ch: _channel_capacity(self.ppn, ch, context=szctx)
         plans = tuple(
-            self._plan_channel(ch, clf, cap, chunk_split=topology == "pipeline")
+            self._plan_channel(ch, clf, cap, topology)
             for ch in self.ppn.channels)
         return self._next("plan", plans=plans)
 
     def _plan_channel(self, ch: Channel, clf: ChannelClassifier, cap,
-                      chunk_split: bool) -> ChannelPlan:
+                      topology: str) -> ChannelPlan:
+        # the verdict→lowering mapping is the runtime registry's single
+        # table; nothing here may hard-code a lowering name
+        from ..runtime.lowering import lowering_for_pattern, split_lowering
         before = clf.classify(ch)
         if before is Pattern.FIFO:
             slots = pow2_size(cap(ch))
             return ChannelPlan(ch.name, before.value, False,
-                               [(0, "fifo", slots)], "ppermute", slots)
+                               [(0, before.value, slots)],
+                               lowering_for_pattern(before), slots, topology)
         splitters = [("depth-split", split_channel)]
-        if chunk_split:
+        if topology == "pipeline":
             splitters.append(("chunk-split", split_by_tile_pair))
         for label, splitter in splitters:
             try:
@@ -261,13 +302,22 @@ class Analysis:
                 return ChannelPlan(
                     ch.name, before.value, True,
                     [(d, pat.value, sz) for d, pat, sz in classified],
-                    f"ppermute({label})",
-                    sum(sz for _, _, sz in classified))
+                    split_lowering(label),
+                    sum(sz for _, _, sz in classified), topology)
         slots = pow2_size(cap(ch))
-        lowering = ("ppermute+register" if before is Pattern.IN_ORDER_MULT
-                    else "reorder-buffer")
         return ChannelPlan(ch.name, before.value, False,
-                           [(0, before.value, slots)], lowering, slots)
+                           [(0, before.value, slots)],
+                           lowering_for_pattern(before), slots, topology)
+
+    def validate(self) -> "Analysis":
+        """Operationally validate every verdict and buffer size: replay each
+        channel's dataflow trace through the planned implementation on the
+        reference backend (`repro.runtime`) — positive AND negative
+        directions — and cross-check peak occupancy against `size()` slots.
+        Raises `runtime.validate.ValidationError` on any contradiction."""
+        from ..runtime.validate import validate_analysis
+        self.ctx.counters["validate_stages"] += 1
+        return self._next("validate", validation=validate_analysis(self))
 
     # ------------------------------------------------------------- report --
 
@@ -326,6 +376,8 @@ class Analysis:
                          else sum(self.sizes.values())),
             plans=(None if self.plans is None
                    else [p.as_dict() for p in self.plans]),
+            validation=(None if self.validation is None
+                        else self.validation.as_dict()),
             cache=dict(self.ctx.counters,
                        polyhedron=polyhedron_cache_stats()),
         )

@@ -23,6 +23,17 @@ def reset_deprecation_warnings() -> None:
     _WARNED.clear()
 
 
+def warn_deprecated(key: str, message: str, stacklevel: int = 3) -> None:
+    """Warn-once (per process) for a deprecated *parameter* or toggle —
+    same registry as the function shims, for call sites where wrapping the
+    whole function would deprecate too much (e.g. the comm planner's old
+    ``fifo: bool`` switch).  ``stacklevel`` counts from here: pass enough to
+    reach the USER'S frame (3 = caller of the warning function's caller)."""
+    if key not in _WARNED:
+        _WARNED.add(key)
+        warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
+
+
 def deprecated_shim(replacement: str) -> Callable[[F], F]:
     """Mark a free function as superseded by the `Analysis` driver; the
     wrapped function warns once, then delegates untouched."""

@@ -62,6 +62,8 @@ def _run_stages(a: Analysis, stages: Sequence[str], pow2: bool,
             a = a.size(pow2=pow2)
         elif stage == "plan":
             a = a.plan(topology=topology)
+        elif stage == "validate":
+            a = a.validate()
         else:
             raise ValueError(f"unknown sweep stage {stage!r}")
     return a

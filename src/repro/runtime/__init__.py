@@ -1,0 +1,28 @@
+"""Executable channel runtime: the lowering IR, its backends, and the
+operational validation stage (`docs/runtime.md`).
+
+    lowering   — lowering vocabulary, THE verdict→lowering table, registry
+    simulator  — trace-driven reference backend (vectorized replay)
+    validate   — `Analysis.validate()`: every verdict executed, both ways
+    jax_backend — collective implementations (loaded lazily; imports jax)
+"""
+from .lowering import (BROADCAST_REGISTER, CHUNK_SPLIT, DEPTH_SPLIT,
+                       FIFO_STREAM, LOWERINGS, PATTERN_LOWERING,
+                       REORDER_BUFFER, Backend, ChannelLowering, backend,
+                       backend_names, is_cheap, is_stream,
+                       lowering_for_pattern, register_backend,
+                       split_lowering)
+from .simulator import (ChannelTrace, OrderViolation, SimulationError,
+                        simulate_channel, trace_channel)
+from .validate import (ChannelValidation, ValidationError, ValidationReport,
+                       validate_analysis)
+
+__all__ = [
+    "BROADCAST_REGISTER", "Backend", "CHUNK_SPLIT", "ChannelLowering",
+    "ChannelTrace", "ChannelValidation", "DEPTH_SPLIT", "FIFO_STREAM",
+    "LOWERINGS", "OrderViolation", "PATTERN_LOWERING", "REORDER_BUFFER",
+    "SimulationError", "ValidationError", "ValidationReport", "backend",
+    "backend_names", "is_cheap", "is_stream", "lowering_for_pattern",
+    "register_backend", "simulate_channel", "split_lowering",
+    "trace_channel", "validate_analysis",
+]

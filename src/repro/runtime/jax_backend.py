@@ -1,0 +1,41 @@
+"""The ``"jax"`` backend: collective implementations of the lowering IR.
+
+Each `ChannelLowering` here builds the per-tick communication step of a
+rotating shard_map ring (`comm/pipeline.py`) from the primitives in
+`comm/channels.py`:
+
+* every ppermute-family lowering is one neighbor-stream hop — the recovered
+  split variants and the broadcast register all ride the same cheap
+  `lax.ppermute` link (the register is consumer-local: the received value is
+  simply reused across ticks);
+* the reorder buffer publishes every shard's value (`lax.all_gather`) and
+  dynamically indexes the producer's slot — the expensive lowering the
+  paper's algorithm exists to avoid, kept as the measured baseline.
+
+This module imports jax (via `comm.channels`); it is loaded lazily by the
+registry (`backend("jax")`) so the analysis core stays jax-free.
+"""
+from __future__ import annotations
+
+from ..comm.channels import fifo_shift, reorder_buffer_read
+from .lowering import (BROADCAST_REGISTER, CHUNK_SPLIT, DEPTH_SPLIT,
+                       FIFO_STREAM, REORDER_BUFFER, ChannelLowering,
+                       register_backend)
+
+JAX = register_backend("jax")
+
+
+@JAX.register(FIFO_STREAM, DEPTH_SPLIT, CHUNK_SPLIT, BROADCAST_REGISTER)
+class PpermuteRing(ChannelLowering):
+    """FIFO neighbor stream: one `lax.ppermute` hop per tick."""
+
+    def step(self, h, axis: str, stage, n: int):
+        return fifo_shift(h, axis, 1, wrap=True)
+
+
+@JAX.register(REORDER_BUFFER)
+class ReorderBufferRing(ChannelLowering):
+    """Out-of-order fallback: all_gather + dynamic index of the producer."""
+
+    def step(self, h, axis: str, stage, n: int):
+        return reorder_buffer_read(h, axis, (stage - 1) % n)

@@ -81,11 +81,25 @@ def test_pipeline_builds_classifier_and_sizing_once():
 
 
 def test_report_schema_and_json_roundtrip():
+    from repro.core import SCHEMA_VERSION, AnalysisReport
+
     case = get("jacobi-1d")
     rep = (analyze(case).classify().fifoize().size(pow2=True).plan().report())
     doc = json.loads(rep.to_json())
     assert doc["kernel"] == "jacobi-1d"
     assert doc["stages"] == ["ppn", "classify", "fifoize", "size", "plan"]
+    # schema_version guards downstream artifacts against format drift:
+    # report → json → load → compare is the identity …
+    assert doc["schema_version"] == SCHEMA_VERSION
+    loaded = AnalysisReport.from_json(rep.to_json())
+    assert loaded == rep
+    assert loaded.as_dict() == doc
+    # … and drifted versions fail loudly instead of mis-parsing
+    drifted = dict(doc, schema_version=SCHEMA_VERSION + 1)
+    unversioned = {k: v for k, v in doc.items() if k != "schema_version"}
+    for stale in (drifted, unversioned):
+        with pytest.raises(ValueError, match="schema_version"):
+            AnalysisReport.from_dict(stale)
     assert doc["sizes_pow2"] is True
     assert doc["total_slots"] == sum(c["slots"] for c in doc["channels"])
     for row in doc["channels"]:

@@ -1,5 +1,9 @@
 """Pipeline runtime on a real multi-device (host) mesh — subprocess because
-the device count must be set before jax initializes."""
+the device count must be set before jax initializes.
+
+The FIFO-stream path takes its lowering from the planner's `ChannelPlan`
+records through the shared registry (`plans=`); the reorder-buffer baseline
+is forced by registry name.  Both must match the sequential reference."""
 import os
 import pathlib
 import subprocess
@@ -10,10 +14,13 @@ import pytest
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
 import jax, jax.numpy as jnp
-from repro.comm.pipeline import pipeline_loss_fn
+from jax.sharding import Mesh
+from repro.comm import PipelineSpec, analyze_pipeline
+from repro.comm.pipeline import pipeline_loss_fn, ring_lowering
 
-mesh = jax.make_mesh((4,), ("pipe",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = Mesh(np.array(jax.devices()).reshape(4), ("pipe",))
 S, D, M, mb = 4, 16, 8, 4
 
 def stage_fn(p, h):
@@ -36,12 +43,15 @@ def ref_loss(params, xs, tg):
     return jnp.mean(jax.vmap(one)(xs, tg))
 
 want = float(ref_loss(params, xs, tg))
-for fifo in (True, False):
-    f = pipeline_loss_fn(stage_fn, loss_head, mesh, "pipe", fifo=fifo)
-    with jax.set_mesh(mesh):
-        got = float(jax.jit(f)(params, xs, tg))
-        g = jax.jit(jax.grad(f))(params, xs, tg)
-    assert abs(got - want) < 1e-5, (fifo, got, want)
+
+# the planner's records drive the lowering selection (registry path)
+_, plans = analyze_pipeline(PipelineSpec(stages=S, microbatches=M))
+assert ring_lowering(plans) == "ppermute", plans
+for kwargs in ({"plans": plans}, {"lowering": "reorder-buffer"}):
+    f = pipeline_loss_fn(stage_fn, loss_head, mesh, "pipe", **kwargs)
+    got = float(jax.jit(f)(params, xs, tg))
+    g = jax.jit(jax.grad(f))(params, xs, tg)
+    assert abs(got - want) < 1e-5, (kwargs, got, want)
     gn = float(jnp.sqrt(sum(jnp.sum(x * x) for x in jax.tree.leaves(g))))
     assert gn > 0
 print("PIPELINE_OK")

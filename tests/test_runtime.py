@@ -1,0 +1,226 @@
+"""The channel-lowering IR + executable runtime (src/repro/runtime/).
+
+1. Registry: one verdict→lowering table, backends resolve lazily, both
+   backends implement the full vocabulary.
+2. Simulator semantics on hand-built 2-process PPNs: each verdict's planned
+   implementation executes its trace, and cheaper implementations REJECT it
+   (the negative direction).
+3. `Analysis.validate()` passes on every PolyBench kernel pre- and
+   post-FIFOIZE, with plan records, and across tilings via `sweep`.
+4. Injected contradictions (a wrong plan) are caught as `ValidationError`.
+5. The comm pipeline selects its lowering from `ChannelPlan` records through
+   the registry; the old ``fifo`` toggle warns once.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (AnalysisReport, ChannelPlan, Pattern, analyze,
+                        reset_deprecation_warnings)
+from repro.core.polybench import get, kernel_names
+from repro.core.ppn import PPN, Channel, Process
+from repro.core.schedule import AffineSchedule
+from repro.core.sweep import report_payload, sweep
+from repro.core.tiling import rescale_tilings
+from repro.runtime import (BROADCAST_REGISTER, FIFO_STREAM, LOWERINGS,
+                           PATTERN_LOWERING, REORDER_BUFFER, OrderViolation,
+                           ValidationError, backend, lowering_for_pattern,
+                           simulate_channel, trace_channel)
+
+# ------------------------------------------------------------ registry -----
+
+
+def test_single_verdict_table_covers_every_pattern():
+    assert set(PATTERN_LOWERING) == {p.value for p in Pattern}
+    for p in Pattern:
+        assert lowering_for_pattern(p) == PATTERN_LOWERING[p.value]
+        assert lowering_for_pattern(p.value) == PATTERN_LOWERING[p.value]
+
+
+def test_reference_backend_implements_full_vocabulary():
+    ref = backend("reference")
+    for name in LOWERINGS:
+        impl = ref.implementation(name)
+        assert impl.lowering == name
+        assert hasattr(impl, "run")
+
+
+def test_jax_backend_loads_lazily_and_covers_vocabulary():
+    jx = backend("jax")
+    for name in LOWERINGS:
+        assert jx.supports(name)
+        assert hasattr(jx.implementation(name), "step")
+
+
+def test_registry_errors_are_loud():
+    with pytest.raises(KeyError, match="no backend"):
+        backend("tpu-emulator")
+    with pytest.raises(KeyError, match="implements no lowering"):
+        backend("reference")._impl and backend("reference").implementation(
+            "not-a-lowering")
+    with pytest.raises(KeyError, match="unknown lowering"):
+        backend("reference").register("not-a-lowering")(object)
+
+
+def test_channel_plan_resolves_implementation_via_registry():
+    plan = ChannelPlan("c", "fifo", False, [(0, "fifo", 4)], FIFO_STREAM, 4)
+    assert plan.implementation("reference").lowering == FIFO_STREAM
+    assert plan.topology == "sequential"
+
+
+# ------------------------------------------- simulator on 2-process PPNs ---
+
+
+def two_proc_ppn(src_idx):
+    """Producer writes i=0..n-1 in order; consumer j reads value src_idx[j]
+    in order.  The src pattern alone decides the verdict."""
+    src = np.asarray(src_idx, dtype=np.int64)[:, None]
+    m = len(src)
+    prod = Process("prod", ("i",), AffineSchedule.identity(("i",)),
+                   np.arange(int(src.max()) + 1, dtype=np.int64)[:, None],
+                   stmt_rank=0)
+    cons = Process("cons", ("j",), AffineSchedule.identity(("j",)),
+                   np.arange(m, dtype=np.int64)[:, None], stmt_rank=1)
+    ch = Channel("prod", "cons", 0, "a", src,
+                 np.arange(m, dtype=np.int64)[:, None])
+    return PPN("toy", {}, {"prod": prod, "cons": cons}, [ch]), ch
+
+
+CASES = [
+    ([0, 1, 2, 3], Pattern.FIFO),
+    ([0, 0, 1, 1], Pattern.IN_ORDER_MULT),
+    ([1, 0, 3, 2], Pattern.OOO_UNICITY),
+    ([1, 1, 0, 0], Pattern.OOO),
+]
+
+
+@pytest.mark.parametrize("src,verdict", CASES)
+def test_planned_implementation_executes_the_trace(src, verdict):
+    ppn, ch = two_proc_ppn(src)
+    assert analyze(ppn).classify().patterns[ch.name] is verdict
+    peak = simulate_channel(ppn, ch, lowering_for_pattern(verdict))
+    assert peak >= 1
+
+
+@pytest.mark.parametrize("src,verdict", CASES)
+def test_cheaper_implementations_reject_the_trace(src, verdict):
+    """The negative direction: a FIFO queue must reject every non-FIFO
+    trace, the register must also reject out-of-order ones."""
+    ppn, ch = two_proc_ppn(src)
+    if verdict is Pattern.FIFO:
+        return
+    with pytest.raises(OrderViolation):
+        simulate_channel(ppn, ch, FIFO_STREAM)
+    if verdict in (Pattern.OOO, Pattern.OOO_UNICITY):
+        with pytest.raises(OrderViolation):
+            simulate_channel(ppn, ch, BROADCAST_REGISTER)
+    else:
+        assert simulate_channel(ppn, ch, BROADCAST_REGISTER) >= 1
+
+
+def test_trace_peak_matches_exact_capacity():
+    from repro.core.sizing import _channel_capacity
+
+    for src, _ in CASES:
+        ppn, ch = two_proc_ppn(src)
+        trace = trace_channel(ppn, ch)
+        assert trace.peak_occupancy() == _channel_capacity(ppn, ch)
+
+
+# ----------------------------------------------- Analysis.validate() -------
+
+
+@pytest.mark.parametrize("name", kernel_names())
+def test_validate_passes_pre_and_post_fifoize(name):
+    base = analyze(get(name)).classify()
+    for a in (base.size(pow2=True),
+              base.fifoize().size(pow2=True),
+              base.fifoize().size(pow2=True).plan()):
+        v = a.validate().validation
+        assert v.replays >= len(a.ppn.channels)
+        for row in v.channels:
+            assert row.peak <= row.slots
+            # non-FIFO verdicts must have been rejected by the FIFO queue
+            if row.verdict != Pattern.FIFO.value and row.parts == 1:
+                assert FIFO_STREAM in row.rejected
+
+
+def test_validate_catches_a_wrong_plan():
+    """A FIFO lowering planned for a broken channel must fail validation —
+    this is the corruption a verdict-driven runtime would hit silently."""
+    a = analyze(get("jacobi-1d")).classify().size(pow2=True).plan()
+    broken = [p for p in a.plans if p.pattern_before != Pattern.FIFO.value
+              and not p.split]
+    assert broken
+    bad = dataclasses.replace(broken[0], lowering=FIFO_STREAM)
+    plans = tuple(bad if p.name == bad.name else p for p in a.plans)
+    with pytest.raises(ValidationError, match="does not execute"):
+        dataclasses.replace(a, plans=plans).validate()
+
+
+def test_validate_catches_undersized_buffers():
+    a = analyze(get("gemm")).classify().size(pow2=True)
+    shrunk = {k: max(0, v - 1) for k, v in a.sizes.items()}
+    with pytest.raises(ValidationError, match="exceeds"):
+        dataclasses.replace(a, sizes=shrunk).validate()
+
+
+def test_validate_in_sweep_across_tilings():
+    """`sweep(..., stages=(..., 'validate'))` validates every configuration;
+    reports stay identical to a fresh analyze() per tiling."""
+    stages = ("classify", "fifoize", "size", "validate")
+    for name in ("gemm", "jacobi-1d"):
+        case = get(name)
+        cfgs = [rescale_tilings(case.tilings, b) for b in (2, 4)]
+        swept = sweep(case.kernel, cfgs, stages=stages)
+        for cfg, rep in zip(cfgs, swept):
+            fresh = (analyze(case.kernel, tilings=cfg).classify().fifoize()
+                     .size(pow2=True).validate().report())
+            assert report_payload(fresh) == report_payload(rep)
+            assert rep.validation is not None
+            assert rep.validation["replays"] >= len(rep.channels)
+
+
+def test_report_carries_validation_and_schema_version():
+    rep = (analyze(get("jacobi-1d")).classify().fifoize().size(pow2=True)
+           .plan().validate().report())
+    doc = rep.as_dict()
+    assert doc["schema_version"] == rep.schema_version
+    assert doc["stages"][-1] == "validate"
+    assert doc["validation"]["replays"] >= len(doc["channels"])
+    for row in doc["validation"]["channels"]:
+        assert row["peak"] <= row["slots"]
+    # round-trips through JSON including the validation payload
+    assert AnalysisReport.from_json(rep.to_json()) == rep
+
+
+# ------------------------------------------------- comm-side selection -----
+
+
+def test_pipeline_ring_lowering_from_plan_records():
+    from repro.comm import PipelineSpec, analyze_pipeline
+    from repro.comm.pipeline import ring_lowering
+
+    _, plans = analyze_pipeline(PipelineSpec(stages=4, microbatches=8))
+    assert ring_lowering(plans) == FIFO_STREAM
+    assert ring_lowering([p.as_dict() for p in plans]) == FIFO_STREAM
+    assert plans[0].topology == "pipeline"
+    forced = [dataclasses.replace(plans[0], lowering=REORDER_BUFFER)]
+    assert ring_lowering(forced + list(plans[1:])) == REORDER_BUFFER
+    assert ring_lowering([]) == FIFO_STREAM
+
+
+def test_deprecated_fifo_toggle_warns_once():
+    from repro.comm.pipeline import _resolve_lowering
+
+    reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        assert _resolve_lowering(None, None, True) == FIFO_STREAM
+        assert _resolve_lowering(None, None, False) == REORDER_BUFFER
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1 and "registry" in str(dep[0].message)
+    assert _resolve_lowering(None, None, None) == FIFO_STREAM
+    assert _resolve_lowering(REORDER_BUFFER, None, None) == REORDER_BUFFER
