@@ -1,23 +1,28 @@
-"""CI smoke benchmark: table2 subset + tile-sweep engine + operational
-validation, with guards.
+"""CI smoke benchmark: registry specs + table2 subset + tile-sweep engine +
+operational validation, with guards.
 
     PYTHONPATH=src python -m benchmarks.ci_smoke
 
-Four sections, in order:
+Five sections, in order:
 
-1. **Sweep smoke** (cold caches): for gemm / jacobi-1d / seidel-2d × 3 tile
+1. **Registry check** (`repro.lang.check_registry`, same gate as
+   ``python -m repro.lang --check-registry``): every registered kernel spec
+   must build and validate.  Runs FIRST and aborts the run on failure, so a
+   malformed spec fails with authoring-level diagnostics before any
+   analysis timing section touches it.
+2. **Sweep smoke** (cold caches): for gemm / jacobi-1d / seidel-2d × 3 tile
    sizes, the sweep engine must produce reports identical to a fresh
    `analyze()` per tiling and finish within ``SWEEP_BUDGET`` (0.6×) of the
-   naive per-tiling loop — the amortization regression guard.  Runs FIRST so
-   no disk-warmed cache can distort the ratio.
-2. **Validate smoke**: `Analysis.validate()` on the same 3 kernels, pre- AND
+   naive per-tiling loop — the amortization regression guard.  Runs before
+   any disk-warmed cache can distort the ratio.
+3. **Validate smoke**: `Analysis.validate()` on the same 3 kernels, pre- AND
    post-FIFOIZE — every verdict replayed on the runtime simulator (positive
    and negative directions) and peak occupancy checked against `size()`
    slots, within ``VALIDATE_BUDGET`` of the analysis it checks.
-3. **Persistent store**: if ``REPRO_POLY_CACHE`` is set (CI wires it to an
+4. **Persistent store**: if ``REPRO_POLY_CACHE`` is set (CI wires it to an
    `actions/cache` path), the verdict store is loaded here — warming the
    domain-enumeration boxes for the next section — and saved again at exit.
-4. **Table2 subset**: classifications must match the recorded
+5. **Table2 subset**: classifications must match the recorded
    BENCH_table2.json rows exactly and stay within GUARD_FACTOR of the
    recorded wall-clock.
 """
@@ -48,6 +53,19 @@ VALIDATE_BUDGET = 1.5     # validate() must cost ≤ 1.5× the analysis itself
 
 BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_table2.json"
 CACHE_ENV = "REPRO_POLY_CACHE"
+
+
+def registry_smoke(failures: list) -> None:
+    from repro.core.registry import kernel_names
+    from repro.lang import check_registry
+
+    t0 = time.perf_counter()
+    fails = check_registry()
+    dt = time.perf_counter() - t0
+    status = "ok" if not fails else "INVALID"
+    print(f"registry check  {len(kernel_names())} kernel specs "
+          f"{dt*1e3:7.1f}ms {status}")
+    failures.extend(f"registry/{f}" for f in fails)
 
 
 def sweep_smoke(failures: list) -> None:
@@ -135,23 +153,27 @@ def table2_smoke(failures: list) -> None:
 
 def main() -> int:
     failures: list = []
-    # 1. sweep guard first — it clears caches, so it must not see (or wipe)
-    #    the persistent store
-    sweep_smoke(failures)
-    # 2. operational validation of the same kernels, pre- and post-FIFOIZE
-    validate_smoke(failures)
-    # 3. warm start for the remaining sections, refreshed on the way out
-    cache_path = os.environ.get(CACHE_ENV)
-    if cache_path:
-        clear_polyhedron_cache()
-        print(f"persistent store: loaded "
-              f"{load_polyhedron_cache(cache_path)} entries "
-              f"from {cache_path}")
-    # 4. table2 classification + timing guard
-    table2_smoke(failures)
-    if cache_path and not failures:
-        print(f"persistent store: saved "
-              f"{save_polyhedron_cache(cache_path)} entries")
+    # 1. spec validation — malformed kernel specs abort before any timing
+    #    section spends time (or crashes) on them
+    registry_smoke(failures)
+    if not failures:
+        # 2. sweep guard next — it clears caches, so it must not see (or
+        #    wipe) the persistent store
+        sweep_smoke(failures)
+        # 3. operational validation of the same kernels, pre/post-FIFOIZE
+        validate_smoke(failures)
+        # 4. warm start for the remaining sections, refreshed on the way out
+        cache_path = os.environ.get(CACHE_ENV)
+        if cache_path:
+            clear_polyhedron_cache()
+            print(f"persistent store: loaded "
+                  f"{load_polyhedron_cache(cache_path)} entries "
+                  f"from {cache_path}")
+        # 5. table2 classification + timing guard
+        table2_smoke(failures)
+        if cache_path and not failures:
+            print(f"persistent store: saved "
+                  f"{save_polyhedron_cache(cache_path)} entries")
     for f in failures:
         print("FAIL:", f, file=sys.stderr)
     return 1 if failures else 0

@@ -7,7 +7,10 @@ Public API:
     patterns                        — FIFO / in-order / out-of-order classifier
     split                           — SPLIT + FIFOIZE (paper Fig. 2)
     sizing                          — channel capacity + pow2 heuristic
+    registry                        — frontend-agnostic kernel registry
     polybench                       — the paper's 15-kernel benchmark suite
+                                      (authored via `repro.lang`, the
+                                      declarative builder frontend)
 """
 from .affine import Constraint, LinExpr, ceil_div, eq, floor_div, ge, gt, le, lt, v
 from .analysis import (SCHEMA_VERSION, Analysis, AnalysisContext,
@@ -22,8 +25,10 @@ from .polyhedron import (Polyhedron, clear_polyhedron_cache,
                          merge_polyhedron_cache, polyhedron_cache_stats,
                          save_polyhedron_cache)
 from .ppn import PPN, Channel, DomainIndex, Process
+from .registry import resolve_case
 from .relation import Relation
-from .schedule import AffineSchedule
+from .schedule import (AffineSchedule, PROLOGUE_C0, boundary_schedule,
+                       epilogue_c0)
 from .sizing import (SizingContext, channel_capacity, pow2_size,
                      size_channels, tick_capacity)
 from .split import (FifoizeReport, NotApplicable, fifoize, fifoize_relation,
@@ -38,14 +43,15 @@ __all__ = [
     "Constraint", "DepEdges", "DomainIndex", "FifoizeReport", "Kernel",
     "LinExpr", "NotApplicable", "PPN", "Pattern", "Polyhedron", "ProcSpace",
     "Process", "Relation", "SCHEMA_VERSION", "SizingContext", "Statement",
-    "Tiling", "analyze", "SweepJob", "ceil_div", "channel_capacity",
-    "classify_channel",
+    "Tiling", "analyze", "SweepJob", "PROLOGUE_C0", "boundary_schedule",
+    "ceil_div", "channel_capacity", "classify_channel",
     "classify_channels", "classify_edges", "classify_symbolic",
     "clear_polyhedron_cache", "direct_dependences", "eq",
     "export_polyhedron_cache", "fifoize", "fifoize_relation", "floor_div",
     "ge", "gt", "in_order_symbolic", "le", "load_polyhedron_cache", "lt",
-    "merge_polyhedron_cache", "polyhedron_cache_stats", "pow2_size",
-    "rectangular", "report_payload", "rescale_tilings",
+    "epilogue_c0", "merge_polyhedron_cache", "polyhedron_cache_stats",
+    "pow2_size", "rectangular", "report_payload", "rescale_tilings",
+    "resolve_case",
     "reset_deprecation_warnings", "run_job", "save_polyhedron_cache",
     "size_channels", "split_by_tile_pair", "split_channel", "split_covers",
     "split_relation", "sweep", "sweep_parallel", "tick_capacity",

@@ -389,9 +389,14 @@ def analyze(kernel: Union[Kernel, PPN, Any],
     """Entry point of the staged pipeline.
 
     Accepts a `Kernel` (the dataflow oracle runs once, here), an
-    already-built `PPN` (e.g. from `comm.planner.pipeline_ppn`), or any
-    object with `.kernel` / `.tilings` attributes (a polybench `KernelCase`).
+    already-built `PPN` (e.g. from `comm.planner.pipeline_ppn`), any object
+    with `.kernel` / `.tilings` attributes (a polybench `KernelCase`), or a
+    builder program implementing `__kernelcase__()` (a `repro.lang.Nest` —
+    compiled and validated here, so malformed specs fail with diagnostics
+    before any analysis runs).
     """
+    if hasattr(kernel, "__kernelcase__"):
+        kernel = kernel.__kernelcase__()
     if isinstance(kernel, PPN):
         if params is not None or tilings is not None:
             raise ValueError("params/tilings are baked into a PPN already")

@@ -34,22 +34,28 @@ def warn_deprecated(key: str, message: str, stacklevel: int = 3) -> None:
         warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
 
 
-def deprecated_shim(replacement: str) -> Callable[[F], F]:
-    """Mark a free function as superseded by the `Analysis` driver; the
-    wrapped function warns once, then delegates untouched."""
+def deprecated_shim(replacement: str,
+                    message: "str | None" = None) -> Callable[[F], F]:
+    """Mark a free function as superseded; the wrapped function warns once,
+    then delegates untouched.  The default message points at the `Analysis`
+    driver; pass ``message`` (``{name}`` = function name, ``{replacement}``
+    = the replacement) for shims superseded by something else (e.g. the
+    `repro.lang` authoring frontend).
+    """
 
     def decorate(fn: F) -> F:
         key = f"{fn.__module__}.{fn.__qualname__}"
+        text = (message.format(name=fn.__qualname__, replacement=replacement)
+                if message is not None
+                else f"{fn.__qualname__}() is deprecated; use {replacement} "
+                     f"(repro.core.analysis) so per-process caches are "
+                     f"shared across stages")
 
         @functools.wraps(fn)
         def shim(*args, **kwargs):
             if key not in _WARNED:
                 _WARNED.add(key)
-                warnings.warn(
-                    f"{fn.__qualname__}() is deprecated; use {replacement} "
-                    f"(repro.core.analysis) so per-process caches are shared "
-                    f"across stages",
-                    DeprecationWarning, stacklevel=2)
+                warnings.warn(text, DeprecationWarning, stacklevel=2)
             return fn(*args, **kwargs)
 
         shim.__wrapped_impl__ = fn

@@ -1,36 +1,49 @@
 """PolyBench/C 3.2 kernels as polyhedral specs (paper §4 experimental setup).
 
-Each kernel is expressed as statements with iteration domains, a 2d+1 global
-schedule, and affine array accesses, plus the loop tiling used for the
-experiment (rectangular for linear algebra, skewed for stencils, exactly as
-valid tilings for each kernel's dependences).  Statements living in a sub-band
-of the tiled nest embed into the common tile space with degenerate normals
-(constant tile coordinates) so FIFOIZE can compare tile depths across
-producer/consumer.
+Every kernel is authored with the declarative `repro.lang` frontend
+(`docs/frontend.md`): loop nests built with ``Nest.loop``/``Nest.stmt``,
+affine accesses as operator-overloaded index expressions, 2d+1 schedules
+assigned automatically from program order, and ``load_*``/``store_*``
+boundary processes derived from the declared I/O (prologue ≪ body ≪
+epilogue phase ordering owned by `core.schedule`).  Compilation to
+`Kernel`/`KernelCase` produces byte-identical `AnalysisReport`s to the
+original hand-assembled `Statement` tables — pinned against recorded
+fixtures in ``tests/test_golden_parity.py``.
 
-Structure parameters are concrete (the enumeration backend is exact for fixed
-sizes, like the paper's tool which sizes channels for fixed PolyBench sizes);
-`PARAM_SCALE` lets tests re-run everything at other sizes.
+Each case also carries the loop tiling used for the experiment (rectangular
+for linear algebra, skewed for stencils, exactly as valid tilings for each
+kernel's dependences).  Statements living in a sub-band of the tiled nest
+embed into the common tile space with degenerate normals (constant tile
+coordinates) so FIFOIZE can compare tile depths across producer/consumer.
+
+Structure parameters are concrete (the enumeration backend is exact for
+fixed sizes, like the paper's tool which sizes channels for fixed PolyBench
+sizes); the ``scale`` argument lets tests re-run everything at other sizes.
+
+The registry here is the frontend-agnostic `core.registry`; the old raw
+authoring helpers (``sched``/``rng``/``load``/``store``) remain as
+warn-once deprecated shims for external callers.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import List, Sequence
 
 from .affine import Constraint, LinExpr, ge, le, lt, v
 from .dataflow import Access, Kernel, Statement
-from .schedule import AffineSchedule
+from .deprecation import deprecated_shim
+from .registry import KernelCase, get, kernel_names, register
+from .schedule import (AffineSchedule, LEGACY_EPILOGUE_C0, PROLOGUE_C0,
+                       boundary_schedule)
 from .tiling import Tiling
+from ..lang import Nest
 
-BIG = 10 ** 6
+__all__ = ["KernelCase", "Kernel", "get", "kernel_names", "register",
+           "jacobi_1d_paper", "E", "rd", "wr", "sched", "rng", "load",
+           "store"]
 
 
 def E(x) -> LinExpr:
     return LinExpr.coerce(x)
-
-
-def sched(dims: Sequence[str], *exprs) -> AffineSchedule:
-    return AffineSchedule(tuple(dims), [E(e) for e in exprs])
 
 
 def rd(arr: str, *idx) -> Access:
@@ -40,56 +53,53 @@ def rd(arr: str, *idx) -> Access:
 wr = rd
 
 
+# ------------------------------------------------- deprecated raw authoring
+#
+# The pre-`repro.lang` spec format: hand-built schedules with hand-numbered
+# scalar dims and copy-pasted boundary processes.  Kept as warn-once shims
+# (behaviour unchanged) for external callers; nothing in this repository
+# uses them anymore.
+
+_LANG_MSG = ("{name}() is a legacy raw-spec authoring helper; author kernels "
+             "with the declarative {replacement} frontend instead "
+             "(docs/frontend.md)")
+
+
+@deprecated_shim("repro.lang.Nest", message=_LANG_MSG)
+def sched(dims: Sequence[str], *exprs) -> AffineSchedule:
+    return AffineSchedule(tuple(dims), [E(e) for e in exprs])
+
+
+@deprecated_shim("repro.lang.Nest", message=_LANG_MSG)
 def rng(d: str, lo, hi_excl) -> List[Constraint]:
+    return _rng(d, lo, hi_excl)
+
+
+def _rng(d: str, lo, hi_excl) -> List[Constraint]:
     return [ge(v(d), E(lo)), lt(v(d), E(hi_excl))]
 
 
+@deprecated_shim("repro.lang.Nest", message=_LANG_MSG)
 def load(arr: str, rank: int, *extents) -> Statement:
     """Input process: writes every cell of ``arr`` before the computation."""
     dims = tuple(f"l{k}" for k in range(len(extents)))
     dom: List[Constraint] = []
     for d, ext in zip(dims, extents):
-        dom += rng(d, 0, ext)
+        dom += _rng(d, 0, ext)
     return Statement(f"load_{arr}", dims, dom,
-                     sched(dims, -1, rank, *[v(d) for d in dims]),
+                     boundary_schedule(dims, PROLOGUE_C0, rank),
                      writes=[wr(arr, *[v(d) for d in dims])])
 
 
+@deprecated_shim("repro.lang.Nest", message=_LANG_MSG)
 def store(arr: str, rank: int, *extents) -> Statement:
     dims = tuple(f"s{k}" for k in range(len(extents)))
     dom: List[Constraint] = []
     for d, ext in zip(dims, extents):
-        dom += rng(d, 0, ext)
+        dom += _rng(d, 0, ext)
     return Statement(f"store_{arr}", dims, dom,
-                     sched(dims, BIG, rank, *[v(d) for d in dims]),
+                     boundary_schedule(dims, LEGACY_EPILOGUE_C0, rank),
                      reads=[rd(arr, *[v(d) for d in dims])])
-
-
-@dataclass
-class KernelCase:
-    kernel: Kernel
-    tilings: Dict[str, Tiling]
-    compute: Tuple[str, ...]          # compute-process names (paper's tables
-                                      # count channels between these)
-    notes: str = ""
-
-
-_REGISTRY: Dict[str, Callable[[int], KernelCase]] = {}
-
-
-def register(name: str):
-    def deco(fn):
-        _REGISTRY[name] = fn
-        return fn
-    return deco
-
-
-def kernel_names() -> List[str]:
-    return list(_REGISTRY)
-
-
-def get(name: str, scale: int = 1) -> KernelCase:
-    return _REGISTRY[name](scale)
 
 
 def _rect(dims: Sequence[str], tiled: Sequence[str], b: int) -> Tiling:
@@ -104,372 +114,324 @@ def _rect(dims: Sequence[str], tiled: Sequence[str], b: int) -> Tiling:
 # =========================================================== linear algebra
 
 @register("gemm")
-def gemm(scale: int = 1) -> KernelCase:
+def gemm(scale: int = 1) -> Nest:
     N, b = 12 * scale, 4
-    init = Statement("init", ("i", "j"), rng("i", 0, N) + rng("j", 0, N),
-                     sched(("i", "j"), 0, v("i"), v("j"), 0, 0),
-                     writes=[wr("C", v("i"), v("j"))],
-                     reads=[rd("C", v("i"), v("j"))])
-    upd = Statement("upd", ("i", "j", "k"),
-                    rng("i", 0, N) + rng("j", 0, N) + rng("k", 0, N),
-                    sched(("i", "j", "k"), 0, v("i"), v("j"), 1, v("k")),
-                    writes=[wr("C", v("i"), v("j"))],
-                    reads=[rd("C", v("i"), v("j")), rd("A", v("i"), v("k")),
-                           rd("B", v("k"), v("j"))])
-    k = Kernel("gemm", {}, [load("C", 0, N, N), load("A", 1, N, N),
-                            load("B", 2, N, N), init, upd, store("C", 0, N, N)])
-    til = {"init": _rect(("i", "j"), ("i", "j", "k"), b),
-           "upd": _rect(("i", "j", "k"), ("i", "j", "k"), b)}
-    return KernelCase(k, til, ("init", "upd"))
+    k = Nest("gemm")
+    C, A, B = k.array("C", N, N), k.array("A", N, N), k.array("B", N, N)
+    k.inputs(C, A, B)
+    k.outputs(C)
+    with k.loop("i", 0, N) as i, k.loop("j", 0, N) as j:
+        k.stmt("init", writes=[C[i, j]], reads=[C[i, j]])
+        with k.loop("k", 0, N) as kk:
+            k.stmt("upd", writes=[C[i, j]],
+                   reads=[C[i, j], A[i, kk], B[kk, j]])
+    k.tile("init", _rect(("i", "j"), ("i", "j", "k"), b))
+    k.tile("upd", _rect(("i", "j", "k"), ("i", "j", "k"), b))
+    return k
 
 
 @register("trmm")
-def trmm(scale: int = 1) -> KernelCase:
+def trmm(scale: int = 1) -> Nest:
     N, b = 12 * scale, 4
-    s = Statement("upd", ("i", "j", "k"),
-                  rng("i", 1, N) + rng("j", 0, N) + [ge(v("k"), 0), lt(v("k"), v("i"))],
-                  sched(("i", "j", "k"), 0, v("i"), v("j"), v("k")),
-                  writes=[wr("B", v("i"), v("j"))],
-                  reads=[rd("B", v("i"), v("j")), rd("A", v("i"), v("k")),
-                         rd("B", v("k"), v("j"))])
-    k = Kernel("trmm", {}, [load("A", 0, N, N), load("B", 1, N, N), s,
-                            store("B", 0, N, N)])
-    return KernelCase(k, {"upd": _rect(("i", "j", "k"), ("i", "j", "k"), b)},
-                      ("upd",))
+    k = Nest("trmm")
+    A, B = k.array("A", N, N), k.array("B", N, N)
+    k.inputs(A, B)
+    k.outputs(B)
+    with k.loop("i", 1, N) as i, k.loop("j", 0, N) as j:
+        with k.loop("k", 0, i) as kk:
+            k.stmt("upd", writes=[B[i, j]],
+                   reads=[B[i, j], A[i, kk], B[kk, j]])
+    k.tile("upd", _rect(("i", "j", "k"), ("i", "j", "k"), b))
+    return k
 
 
 @register("syrk")
-def syrk(scale: int = 1) -> KernelCase:
+def syrk(scale: int = 1) -> Nest:
     N, b = 12 * scale, 4
-    init = Statement("init", ("i", "j"), rng("i", 0, N) + rng("j", 0, N),
-                     sched(("i", "j"), 0, v("i"), v("j"), 0, 0),
-                     writes=[wr("C", v("i"), v("j"))],
-                     reads=[rd("C", v("i"), v("j"))])
-    upd = Statement("upd", ("i", "j", "k"),
-                    rng("i", 0, N) + rng("j", 0, N) + rng("k", 0, N),
-                    sched(("i", "j", "k"), 0, v("i"), v("j"), 1, v("k")),
-                    writes=[wr("C", v("i"), v("j"))],
-                    reads=[rd("C", v("i"), v("j")), rd("A", v("i"), v("k")),
-                           rd("A", v("j"), v("k"))])
-    k = Kernel("syrk", {}, [load("C", 0, N, N), load("A", 1, N, N), init, upd,
-                            store("C", 0, N, N)])
-    til = {"init": _rect(("i", "j"), ("i", "j", "k"), b),
-           "upd": _rect(("i", "j", "k"), ("i", "j", "k"), b)}
-    return KernelCase(k, til, ("init", "upd"))
+    k = Nest("syrk")
+    C, A = k.array("C", N, N), k.array("A", N, N)
+    k.inputs(C, A)
+    k.outputs(C)
+    with k.loop("i", 0, N) as i, k.loop("j", 0, N) as j:
+        k.stmt("init", writes=[C[i, j]], reads=[C[i, j]])
+        with k.loop("k", 0, N) as kk:
+            k.stmt("upd", writes=[C[i, j]],
+                   reads=[C[i, j], A[i, kk], A[j, kk]])
+    k.tile("init", _rect(("i", "j"), ("i", "j", "k"), b))
+    k.tile("upd", _rect(("i", "j", "k"), ("i", "j", "k"), b))
+    return k
 
 
 @register("syr2k")
-def syr2k(scale: int = 1) -> KernelCase:
-    case = syrk(scale)
-    N = 12 * scale
-    upd = case.kernel.statement("upd")
-    upd.reads = [rd("C", v("i"), v("j")), rd("A", v("i"), v("k")),
-                 rd("B", v("j"), v("k")), rd("B", v("i"), v("k")),
-                 rd("A", v("j"), v("k"))]
-    stmts = [s for s in case.kernel.statements if not s.name.startswith(("load_B",))]
-    stmts.insert(2, load("B", 2, N, N))
-    k = Kernel("syr2k", {}, stmts)
-    return KernelCase(k, case.tilings, ("init", "upd"))
+def syr2k(scale: int = 1) -> Nest:
+    N, b = 12 * scale, 4
+    k = Nest("syr2k")
+    C, A, B = k.array("C", N, N), k.array("A", N, N), k.array("B", N, N)
+    k.inputs(C, A, B)
+    k.outputs(C)
+    with k.loop("i", 0, N) as i, k.loop("j", 0, N) as j:
+        k.stmt("init", writes=[C[i, j]], reads=[C[i, j]])
+        with k.loop("k", 0, N) as kk:
+            k.stmt("upd", writes=[C[i, j]],
+                   reads=[C[i, j], A[i, kk], B[j, kk], B[i, kk], A[j, kk]])
+    k.tile("init", _rect(("i", "j"), ("i", "j", "k"), b))
+    k.tile("upd", _rect(("i", "j", "k"), ("i", "j", "k"), b))
+    return k
 
 
 @register("symm")
-def symm(scale: int = 1) -> KernelCase:
+def symm(scale: int = 1) -> Nest:
     N, b = 12 * scale, 4
-    ij = rng("i", 0, N) + rng("j", 0, N)
-    ijk = ij + [ge(v("k"), 0), lt(v("k"), v("i"))]
-    s0 = Statement("accinit", ("i", "j"), ij,
-                   sched(("i", "j"), 0, v("i"), v("j"), 0, 0, 0),
-                   writes=[wr("acc", v("i"), v("j"))])
-    s1 = Statement("cupd", ("i", "j", "k"), ijk,
-                   sched(("i", "j", "k"), 0, v("i"), v("j"), 1, v("k"), 0),
-                   writes=[wr("C", v("k"), v("j"))],
-                   reads=[rd("C", v("k"), v("j")), rd("A", v("k"), v("i")),
-                          rd("B", v("i"), v("j"))])
-    s2 = Statement("accupd", ("i", "j", "k"), ijk,
-                   sched(("i", "j", "k"), 0, v("i"), v("j"), 1, v("k"), 1),
-                   writes=[wr("acc", v("i"), v("j"))],
-                   reads=[rd("acc", v("i"), v("j")), rd("B", v("k"), v("j")),
-                          rd("A", v("k"), v("i"))])
-    s3 = Statement("cfin", ("i", "j"), ij,
-                   sched(("i", "j"), 0, v("i"), v("j"), 2, 0, 0),
-                   writes=[wr("C", v("i"), v("j"))],
-                   reads=[rd("C", v("i"), v("j")), rd("A", v("i"), v("i")),
-                          rd("B", v("i"), v("j")), rd("acc", v("i"), v("j"))])
-    k = Kernel("symm", {}, [load("C", 0, N, N), load("A", 1, N, N),
-                            load("B", 2, N, N), s0, s1, s2, s3,
-                            store("C", 0, N, N)])
-    til = {"accinit": _rect(("i", "j"), ("i", "j", "k"), b),
-           "cupd": _rect(("i", "j", "k"), ("i", "j", "k"), b),
-           "accupd": _rect(("i", "j", "k"), ("i", "j", "k"), b),
-           "cfin": _rect(("i", "j"), ("i", "j", "k"), b)}
-    return KernelCase(k, til, ("accinit", "cupd", "accupd", "cfin"))
+    k = Nest("symm")
+    C, A, B = k.array("C", N, N), k.array("A", N, N), k.array("B", N, N)
+    acc = k.array("acc", N, N)
+    k.inputs(C, A, B)
+    k.outputs(C)
+    with k.loop("i", 0, N) as i, k.loop("j", 0, N) as j:
+        k.stmt("accinit", writes=[acc[i, j]])
+        with k.loop("k", 0, i) as kk:
+            k.stmt("cupd", writes=[C[kk, j]],
+                   reads=[C[kk, j], A[kk, i], B[i, j]])
+            k.stmt("accupd", writes=[acc[i, j]],
+                   reads=[acc[i, j], B[kk, j], A[kk, i]])
+        k.stmt("cfin", writes=[C[i, j]],
+               reads=[C[i, j], A[i, i], B[i, j], acc[i, j]])
+    k.tile("accinit", _rect(("i", "j"), ("i", "j", "k"), b))
+    k.tile("cupd", _rect(("i", "j", "k"), ("i", "j", "k"), b))
+    k.tile("accupd", _rect(("i", "j", "k"), ("i", "j", "k"), b))
+    k.tile("cfin", _rect(("i", "j"), ("i", "j", "k"), b))
+    return k
 
 
 @register("gemver")
-def gemver(scale: int = 1) -> KernelCase:
+def gemver(scale: int = 1) -> Nest:
     N, b = 12 * scale, 4
-    ij = rng("i", 0, N) + rng("j", 0, N)
-    s1 = Statement("ahat", ("i", "j"), ij,
-                   sched(("i", "j"), 0, v("i"), v("j")),
-                   writes=[wr("A", v("i"), v("j"))],
-                   reads=[rd("A", v("i"), v("j")), rd("u1", v("i")), rd("v1", v("j")),
-                          rd("u2", v("i")), rd("v2", v("j"))])
-    s2 = Statement("xupd", ("i", "j"), ij,
-                   sched(("i", "j"), 1, v("i"), v("j")),
-                   writes=[wr("x", v("i"))],
-                   reads=[rd("x", v("i")), rd("A", v("j"), v("i")), rd("y", v("j"))])
-    s3 = Statement("xz", ("i",), rng("i", 0, N),
-                   sched(("i",), 2, v("i"), 0),
-                   writes=[wr("x", v("i"))],
-                   reads=[rd("x", v("i")), rd("z", v("i"))])
-    s4 = Statement("wupd", ("i", "j"), ij,
-                   sched(("i", "j"), 3, v("i"), v("j")),
-                   writes=[wr("w", v("i"))],
-                   reads=[rd("w", v("i")), rd("A", v("i"), v("j")), rd("x", v("j"))])
-    k = Kernel("gemver", {}, [
-        load("A", 0, N, N), load("u1", 1, N), load("v1", 2, N),
-        load("u2", 3, N), load("v2", 4, N), load("x", 5, N), load("y", 6, N),
-        load("z", 7, N), load("w", 8, N),
-        s1, s2, s3, s4, store("x", 0, N), store("w", 1, N)])
-    til = {"ahat": _rect(("i", "j"), ("i", "j"), b),
-           "xupd": _rect(("i", "j"), ("i", "j"), b),
-           "xz": _rect(("i",), ("i", "j"), b),
-           "wupd": _rect(("i", "j"), ("i", "j"), b)}
-    return KernelCase(k, til, ("ahat", "xupd", "xz", "wupd"))
+    k = Nest("gemver")
+    A = k.array("A", N, N)
+    u1, v1, u2, v2 = (k.array(n, N) for n in ("u1", "v1", "u2", "v2"))
+    x, y, z, w = (k.array(n, N) for n in ("x", "y", "z", "w"))
+    k.inputs(A, u1, v1, u2, v2, x, y, z, w)
+    k.outputs(x, w)
+    with k.loop("i", 0, N) as i, k.loop("j", 0, N) as j:
+        k.stmt("ahat", writes=[A[i, j]],
+               reads=[A[i, j], u1[i], v1[j], u2[i], v2[j]])
+    with k.loop("i", 0, N) as i, k.loop("j", 0, N) as j:
+        k.stmt("xupd", writes=[x[i]], reads=[x[i], A[j, i], y[j]])
+    with k.loop("i", 0, N) as i:
+        k.stmt("xz", writes=[x[i]], reads=[x[i], z[i]])
+    with k.loop("i", 0, N) as i, k.loop("j", 0, N) as j:
+        k.stmt("wupd", writes=[w[i]], reads=[w[i], A[i, j], x[j]])
+    k.tile("ahat", _rect(("i", "j"), ("i", "j"), b))
+    k.tile("xupd", _rect(("i", "j"), ("i", "j"), b))
+    k.tile("xz", _rect(("i",), ("i", "j"), b))
+    k.tile("wupd", _rect(("i", "j"), ("i", "j"), b))
+    return k
 
 
 @register("gesummv")
-def gesummv(scale: int = 1) -> KernelCase:
+def gesummv(scale: int = 1) -> Nest:
     N, b = 12 * scale, 4
-    ij = rng("i", 0, N) + rng("j", 0, N)
-    s0 = Statement("tinit", ("i",), rng("i", 0, N),
-                   sched(("i",), 0, v("i"), 0, 0, 0),
-                   writes=[wr("tmp", v("i"))])
-    s1 = Statement("yinit", ("i",), rng("i", 0, N),
-                   sched(("i",), 0, v("i"), 1, 0, 0),
-                   writes=[wr("y", v("i"))])
-    s2 = Statement("tupd", ("i", "j"), ij,
-                   sched(("i", "j"), 0, v("i"), 2, v("j"), 0),
-                   writes=[wr("tmp", v("i"))],
-                   reads=[rd("tmp", v("i")), rd("A", v("i"), v("j")), rd("x", v("j"))])
-    s3 = Statement("yupd", ("i", "j"), ij,
-                   sched(("i", "j"), 0, v("i"), 2, v("j"), 1),
-                   writes=[wr("y", v("i"))],
-                   reads=[rd("y", v("i")), rd("B", v("i"), v("j")), rd("x", v("j"))])
-    s4 = Statement("yfin", ("i",), rng("i", 0, N),
-                   sched(("i",), 0, v("i"), 3, 0, 0),
-                   writes=[wr("y", v("i"))],
-                   reads=[rd("tmp", v("i")), rd("y", v("i"))])
-    k = Kernel("gesummv", {}, [load("A", 0, N, N), load("B", 1, N, N),
-                               load("x", 2, N), s0, s1, s2, s3, s4,
-                               store("y", 0, N)])
-    til = {"tinit": _rect(("i",), ("i", "j"), b),
-           "yinit": _rect(("i",), ("i", "j"), b),
-           "tupd": _rect(("i", "j"), ("i", "j"), b),
-           "yupd": _rect(("i", "j"), ("i", "j"), b),
-           "yfin": _rect(("i",), ("i", "j"), b)}
-    return KernelCase(k, til, ("tinit", "yinit", "tupd", "yupd", "yfin"))
+    k = Nest("gesummv")
+    A, B = k.array("A", N, N), k.array("B", N, N)
+    x, y, tmp = k.array("x", N), k.array("y", N), k.array("tmp", N)
+    k.inputs(A, B, x)
+    k.outputs(y)
+    with k.loop("i", 0, N) as i:
+        k.stmt("tinit", writes=[tmp[i]])
+        k.stmt("yinit", writes=[y[i]])
+        with k.loop("j", 0, N) as j:
+            k.stmt("tupd", writes=[tmp[i]], reads=[tmp[i], A[i, j], x[j]])
+            k.stmt("yupd", writes=[y[i]], reads=[y[i], B[i, j], x[j]])
+        k.stmt("yfin", writes=[y[i]], reads=[tmp[i], y[i]])
+    k.tile("tinit", _rect(("i",), ("i", "j"), b))
+    k.tile("yinit", _rect(("i",), ("i", "j"), b))
+    k.tile("tupd", _rect(("i", "j"), ("i", "j"), b))
+    k.tile("yupd", _rect(("i", "j"), ("i", "j"), b))
+    k.tile("yfin", _rect(("i",), ("i", "j"), b))
+    return k
 
 
 @register("lu")
-def lu(scale: int = 1) -> KernelCase:
+def lu(scale: int = 1) -> Nest:
     N, b = 12 * scale, 4
-    s1 = Statement("div", ("k", "j"),
-                   rng("k", 0, N) + [ge(v("j"), v("k") + 1), lt(v("j"), E(N))],
-                   sched(("k", "j"), 0, v("k"), 0, v("j"), 0),
-                   writes=[wr("A", v("k"), v("j"))],
-                   reads=[rd("A", v("k"), v("j")), rd("A", v("k"), v("k"))])
-    s2 = Statement("upd", ("k", "i", "j"),
-                   rng("k", 0, N) + [ge(v("i"), v("k") + 1), lt(v("i"), E(N)),
-                                     ge(v("j"), v("k") + 1), lt(v("j"), E(N))],
-                   sched(("k", "i", "j"), 0, v("k"), 1, v("i"), v("j")),
-                   writes=[wr("A", v("i"), v("j"))],
-                   reads=[rd("A", v("i"), v("j")), rd("A", v("i"), v("k")),
-                          rd("A", v("k"), v("j"))])
-    k = Kernel("lu", {}, [load("A", 0, N, N), s1, s2, store("A", 0, N, N)])
-    til = {"div": Tiling(((1, 0), (0, 1)), (b, b)),
-           "upd": Tiling(((1, 0, 0), (0, 0, 1)), (b, b))}
-    return KernelCase(k, til, ("div", "upd"))
+    k = Nest("lu")
+    A = k.array("A", N, N)
+    k.inputs(A)
+    k.outputs(A)
+    with k.loop("k", 0, N) as kk:
+        with k.loop("j", kk + 1, N) as j:
+            k.stmt("div", writes=[A[kk, j]], reads=[A[kk, j], A[kk, kk]])
+        with k.loop("i", kk + 1, N) as i:
+            with k.loop("j", kk + 1, N) as j:
+                k.stmt("upd", writes=[A[i, j]],
+                       reads=[A[i, j], A[i, kk], A[kk, j]])
+    k.tile("div", Tiling(((1, 0), (0, 1)), (b, b)))
+    k.tile("upd", Tiling(((1, 0, 0), (0, 0, 1)), (b, b)))
+    return k
 
 
 @register("cholesky")
-def cholesky(scale: int = 1) -> KernelCase:
+def cholesky(scale: int = 1) -> Nest:
     N, b = 12 * scale, 4
-    s0 = Statement("xinit", ("i",), rng("i", 0, N),
-                   sched(("i",), 0, v("i"), 0, 0, 0, 0),
-                   writes=[wr("x", v("i"))], reads=[rd("A", v("i"), v("i"))])
-    s1 = Statement("xupd", ("i", "j"),
-                   rng("i", 0, N) + [ge(v("j"), 0), lt(v("j"), v("i"))],
-                   sched(("i", "j"), 0, v("i"), 1, v("j"), 0, 0),
-                   writes=[wr("x", v("i"))],
-                   reads=[rd("x", v("i")), rd("L", v("i"), v("j"))])
-    s2 = Statement("pset", ("i",), rng("i", 0, N),
-                   sched(("i",), 0, v("i"), 2, 0, 0, 0),
-                   writes=[wr("p", v("i"))], reads=[rd("x", v("i"))])
-    s3 = Statement("yinit", ("i", "j"),
-                   rng("i", 0, N) + [ge(v("j"), v("i") + 1), lt(v("j"), E(N))],
-                   sched(("i", "j"), 0, v("i"), 3, v("j"), 0, 0),
-                   writes=[wr("y", v("i"), v("j"))], reads=[rd("A", v("i"), v("j"))])
-    s4 = Statement("yupd", ("i", "j", "k"),
-                   rng("i", 0, N) + [ge(v("j"), v("i") + 1), lt(v("j"), E(N)),
-                                     ge(v("k"), 0), lt(v("k"), v("i"))],
-                   sched(("i", "j", "k"), 0, v("i"), 3, v("j"), 1, v("k")),
-                   writes=[wr("y", v("i"), v("j"))],
-                   reads=[rd("y", v("i"), v("j")), rd("L", v("j"), v("k")),
-                          rd("L", v("i"), v("k"))])
-    s5 = Statement("lset", ("i", "j"),
-                   rng("i", 0, N) + [ge(v("j"), v("i") + 1), lt(v("j"), E(N))],
-                   sched(("i", "j"), 0, v("i"), 3, v("j"), 2, 0),
-                   writes=[wr("L", v("j"), v("i"))],
-                   reads=[rd("y", v("i"), v("j")), rd("p", v("i"))])
-    k = Kernel("cholesky", {}, [load("A", 0, N, N), s0, s1, s2, s3, s4, s5,
-                                store("L", 0, N, N), store("p", 1, N)])
-    til = {"xinit": Tiling(((1,), (0,)), (b, b)),
-           "xupd": Tiling(((1, 0), (0, 1)), (b, b)),
-           "pset": Tiling(((1,), (0,)), (b, b)),
-           "yinit": Tiling(((1, 0), (0, 1)), (b, b)),
-           "yupd": Tiling(((1, 0, 0), (0, 1, 0)), (b, b)),
-           "lset": Tiling(((1, 0), (0, 1)), (b, b))}
-    return KernelCase(k, til, ("xinit", "xupd", "pset", "yinit", "yupd", "lset"))
+    k = Nest("cholesky")
+    A, L, y = k.array("A", N, N), k.array("L", N, N), k.array("y", N, N)
+    x, p = k.array("x", N), k.array("p", N)
+    k.inputs(A)
+    k.outputs(L, p)
+    with k.loop("i", 0, N) as i:
+        k.stmt("xinit", writes=[x[i]], reads=[A[i, i]])
+        with k.loop("j", 0, i) as j:
+            k.stmt("xupd", writes=[x[i]], reads=[x[i], L[i, j]])
+        k.stmt("pset", writes=[p[i]], reads=[x[i]])
+        with k.loop("j", i + 1, N) as j:
+            k.stmt("yinit", writes=[y[i, j]], reads=[A[i, j]])
+            with k.loop("k", 0, i) as kk:
+                k.stmt("yupd", writes=[y[i, j]],
+                       reads=[y[i, j], L[j, kk], L[i, kk]])
+            k.stmt("lset", writes=[L[j, i]], reads=[y[i, j], p[i]])
+    k.tile("xinit", Tiling(((1,), (0,)), (b, b)))
+    k.tile("xupd", Tiling(((1, 0), (0, 1)), (b, b)))
+    k.tile("pset", Tiling(((1,), (0,)), (b, b)))
+    k.tile("yinit", Tiling(((1, 0), (0, 1)), (b, b)))
+    k.tile("yupd", Tiling(((1, 0, 0), (0, 1, 0)), (b, b)))
+    k.tile("lset", Tiling(((1, 0), (0, 1)), (b, b)))
+    return k
 
 
 @register("atax")
-def atax(scale: int = 1) -> KernelCase:
+def atax(scale: int = 1) -> Nest:
     N, b = 12 * scale, 4
-    ij = rng("i", 0, N) + rng("j", 0, N)
-    s0 = Statement("yinit", ("j",), rng("j", 0, N),
-                   sched(("j",), 0, v("j"), 0, 0),
-                   writes=[wr("y", v("j"))])
-    s1 = Statement("tinit", ("i",), rng("i", 0, N),
-                   sched(("i",), 1, v("i"), 0, 0),
-                   writes=[wr("tmp", v("i"))])
-    s2 = Statement("tupd", ("i", "j"), ij,
-                   sched(("i", "j"), 1, v("i"), 1, v("j")),
-                   writes=[wr("tmp", v("i"))],
-                   reads=[rd("tmp", v("i")), rd("A", v("i"), v("j")), rd("x", v("j"))])
-    s3 = Statement("yupd", ("i", "j"), ij,
-                   sched(("i", "j"), 1, v("i"), 2, v("j")),
-                   writes=[wr("y", v("j"))],
-                   reads=[rd("y", v("j")), rd("tmp", v("i")), rd("A", v("i"), v("j"))])
-    k = Kernel("atax", {}, [load("A", 0, N, N), load("x", 1, N),
-                            s0, s1, s2, s3, store("y", 0, N)])
-    til = {"yinit": Tiling(((1,), (0,)), (b, b)),
-           "tinit": Tiling(((1,), (0,)), (b, b)),
-           "tupd": _rect(("i", "j"), ("i", "j"), b),
-           "yupd": _rect(("i", "j"), ("i", "j"), b)}
-    return KernelCase(k, til, ("yinit", "tinit", "tupd", "yupd"))
+    k = Nest("atax")
+    A, x, y, tmp = (k.array("A", N, N), k.array("x", N), k.array("y", N),
+                    k.array("tmp", N))
+    k.inputs(A, x)
+    k.outputs(y)
+    with k.loop("j", 0, N) as j:
+        k.stmt("yinit", writes=[y[j]])
+    with k.loop("i", 0, N) as i:
+        k.stmt("tinit", writes=[tmp[i]])
+        with k.loop("j", 0, N) as j:
+            k.stmt("tupd", writes=[tmp[i]], reads=[tmp[i], A[i, j], x[j]])
+        with k.loop("j", 0, N) as j:
+            k.stmt("yupd", writes=[y[j]], reads=[y[j], tmp[i], A[i, j]])
+    k.tile("yinit", Tiling(((1,), (0,)), (b, b)))
+    k.tile("tinit", Tiling(((1,), (0,)), (b, b)))
+    k.tile("tupd", _rect(("i", "j"), ("i", "j"), b))
+    k.tile("yupd", _rect(("i", "j"), ("i", "j"), b))
+    return k
 
 
 @register("doitgen")
-def doitgen(scale: int = 1) -> KernelCase:
+def doitgen(scale: int = 1) -> Nest:
     N, b = 8 * scale, 4
-    rqp = rng("r", 0, N) + rng("q", 0, N) + rng("p", 0, N)
-    rqps = rqp + rng("s", 0, N)
-    s0 = Statement("sinit", ("r", "q", "p"), rqp,
-                   sched(("r", "q", "p"), 0, v("r"), v("q"), 0, v("p"), 0, 0),
-                   writes=[wr("sum", v("r"), v("q"), v("p"))])
-    s1 = Statement("supd", ("r", "q", "p", "s"), rqps,
-                   sched(("r", "q", "p", "s"), 0, v("r"), v("q"), 0, v("p"), 1, v("s")),
-                   writes=[wr("sum", v("r"), v("q"), v("p"))],
-                   reads=[rd("sum", v("r"), v("q"), v("p")),
-                          rd("A", v("r"), v("q"), v("s")),
-                          rd("C4", v("s"), v("p"))])
-    s2 = Statement("aset", ("r", "q", "p"), rqp,
-                   sched(("r", "q", "p"), 0, v("r"), v("q"), 1, v("p"), 0, 0),
-                   writes=[wr("A", v("r"), v("q"), v("p"))],
-                   reads=[rd("sum", v("r"), v("q"), v("p"))])
-    k = Kernel("doitgen", {}, [load("A", 0, N, N, N), load("C4", 1, N, N),
-                               s0, s1, s2, store("A", 0, N, N, N)])
-    til = {"sinit": _rect(("r", "q", "p"), ("r", "q", "p", "s"), b),
-           "supd": _rect(("r", "q", "p", "s"), ("r", "q", "p", "s"), b),
-           "aset": _rect(("r", "q", "p"), ("r", "q", "p", "s"), b)}
-    return KernelCase(k, til, ("sinit", "supd", "aset"))
+    k = Nest("doitgen")
+    A, C4 = k.array("A", N, N, N), k.array("C4", N, N)
+    acc = k.array("sum", N, N, N)
+    k.inputs(A, C4)
+    k.outputs(A)
+    with k.loop("r", 0, N) as r, k.loop("q", 0, N) as q:
+        with k.loop("p", 0, N) as p:
+            k.stmt("sinit", writes=[acc[r, q, p]])
+            with k.loop("s", 0, N) as s:
+                k.stmt("supd", writes=[acc[r, q, p]],
+                       reads=[acc[r, q, p], A[r, q, s], C4[s, p]])
+        with k.loop("p", 0, N) as p:
+            k.stmt("aset", writes=[A[r, q, p]], reads=[acc[r, q, p]])
+    k.tile("sinit", _rect(("r", "q", "p"), ("r", "q", "p", "s"), b))
+    k.tile("supd", _rect(("r", "q", "p", "s"), ("r", "q", "p", "s"), b))
+    k.tile("aset", _rect(("r", "q", "p"), ("r", "q", "p", "s"), b))
+    return k
 
 
 # ================================================================== stencils
 
 @register("jacobi-1d")
-def jacobi_1d(scale: int = 1) -> KernelCase:
+def jacobi_1d(scale: int = 1) -> Nest:
     N, T, b = 16 * scale, 8 * scale, 4
-    ti = rng("t", 0, T) + rng("i", 1, N - 1)
-    s1 = Statement("sb", ("t", "i"), ti,
-                   sched(("t", "i"), 0, v("t"), 0, v("i")),
-                   writes=[wr("B", v("i"))],
-                   reads=[rd("A", v("i") - 1), rd("A", v("i")), rd("A", v("i") + 1)])
-    s2 = Statement("sa", ("t", "i"), ti,
-                   sched(("t", "i"), 0, v("t"), 1, v("i")),
-                   writes=[wr("A", v("i"))], reads=[rd("B", v("i"))])
-    k = Kernel("jacobi-1d", {}, [load("A", 0, N), s1, s2, store("A", 0, N)])
+    k = Nest("jacobi-1d")
+    A, B = k.array("A", N), k.array("B", N)
+    k.inputs(A)
+    k.outputs(A)
+    with k.loop("t", 0, T) as t:
+        with k.loop("i", 1, N - 1) as i:
+            k.stmt("sb", writes=[B[i]], reads=[A[i - 1], A[i], A[i + 1]])
+        with k.loop("i", 1, N - 1) as i:
+            k.stmt("sa", writes=[A[i]], reads=[B[i]])
     # skewed tiling: hyperplanes t and t+i (valid: all dep distances satisfy
     # τ·d ≥ 0), the paper's Fig. 3 tiling
-    til = {"sb": Tiling(((1, 0), (1, 1)), (b, b)),
-           "sa": Tiling(((1, 0), (1, 1)), (b, b))}
-    return KernelCase(k, til, ("sb", "sa"))
+    k.tile("sb", Tiling(((1, 0), (1, 1)), (b, b)))
+    k.tile("sa", Tiling(((1, 0), (1, 1)), (b, b)))
+    return k
 
 
 @register("jacobi-2d")
-def jacobi_2d(scale: int = 1) -> KernelCase:
+def jacobi_2d(scale: int = 1) -> Nest:
     N, T, b = 10 * scale, 4 * scale, 4
-    dom = rng("t", 0, T) + rng("i", 1, N - 1) + rng("j", 1, N - 1)
-    s1 = Statement("sb", ("t", "i", "j"), dom,
-                   sched(("t", "i", "j"), 0, v("t"), 0, v("i"), v("j")),
-                   writes=[wr("B", v("i"), v("j"))],
-                   reads=[rd("A", v("i"), v("j")), rd("A", v("i"), v("j") - 1),
-                          rd("A", v("i"), v("j") + 1), rd("A", v("i") + 1, v("j")),
-                          rd("A", v("i") - 1, v("j"))])
-    s2 = Statement("sa", ("t", "i", "j"), dom,
-                   sched(("t", "i", "j"), 0, v("t"), 1, v("i"), v("j")),
-                   writes=[wr("A", v("i"), v("j"))], reads=[rd("B", v("i"), v("j"))])
-    k = Kernel("jacobi-2d", {}, [load("A", 0, N, N), s1, s2, store("A", 0, N, N)])
+    k = Nest("jacobi-2d")
+    A, B = k.array("A", N, N), k.array("B", N, N)
+    k.inputs(A)
+    k.outputs(A)
+    with k.loop("t", 0, T) as t:
+        with k.loop("i", 1, N - 1) as i, k.loop("j", 1, N - 1) as j:
+            k.stmt("sb", writes=[B[i, j]],
+                   reads=[A[i, j], A[i, j - 1], A[i, j + 1],
+                          A[i + 1, j], A[i - 1, j]])
+        with k.loop("i", 1, N - 1) as i, k.loop("j", 1, N - 1) as j:
+            k.stmt("sa", writes=[A[i, j]], reads=[B[i, j]])
     # band tiling (t, t+i) — the I/O-optimizing shape [4]: j streams inside
     t2 = Tiling(((1, 0, 0), (1, 1, 0)), (b, b))
-    return KernelCase(k, {"sb": t2, "sa": t2}, ("sb", "sa"))
+    k.tile("sb", t2)
+    k.tile("sa", t2)
+    return k
 
 
 @register("seidel-2d")
-def seidel_2d(scale: int = 1) -> KernelCase:
+def seidel_2d(scale: int = 1) -> Nest:
     N, T, b = 10 * scale, 4 * scale, 4
-    dom = rng("t", 0, T) + rng("i", 1, N - 1) + rng("j", 1, N - 1)
-    reads = [rd("A", v("i") + di, v("j") + dj)
-             for di in (-1, 0, 1) for dj in (-1, 0, 1)]
-    s = Statement("s", ("t", "i", "j"), dom,
-                  sched(("t", "i", "j"), 0, v("t"), v("i"), v("j")),
-                  writes=[wr("A", v("i"), v("j"))], reads=reads)
-    k = Kernel("seidel-2d", {}, [load("A", 0, N, N), s, store("A", 0, N, N)])
+    k = Nest("seidel-2d")
+    A = k.array("A", N, N)
+    k.inputs(A)
+    k.outputs(A)
+    with k.loop("t", 0, T) as t:
+        with k.loop("i", 1, N - 1) as i, k.loop("j", 1, N - 1) as j:
+            k.stmt("s", writes=[A[i, j]],
+                   reads=[A[i + di, j + dj]
+                          for di in (-1, 0, 1) for dj in (-1, 0, 1)])
     # dependences include (0,1,-1), (1,0,-1), (1,-1,-1) … → skewed band tiling
-    t2 = Tiling(((1, 0, 0), (2, 1, 1)), (b, b))
-    return KernelCase(k, {"s": t2}, ("s",))
+    k.tile("s", Tiling(((1, 0, 0), (2, 1, 1)), (b, b)))
+    return k
 
 
 @register("heat-3d")
-def heat_3d(scale: int = 1) -> KernelCase:
+def heat_3d(scale: int = 1) -> Nest:
     N, T, b = 8 * scale, 4 * scale, 4
-    dom = (rng("t", 0, T) + rng("i", 1, N - 1) + rng("j", 1, N - 1)
-           + rng("k", 1, N - 1))
+    k = Nest("heat-3d")
+    A, B = k.array("A", N, N, N), k.array("B", N, N, N)
+    k.inputs(A)
+    k.outputs(A)
 
-    def star(arr):
-        out = [rd(arr, v("i"), v("j"), v("k"))]
-        for dim, dv in (("i", v("i")), ("j", v("j")), ("k", v("k"))):
+    def star(arr, i, j, kk):
+        out = [arr[i, j, kk]]
+        for axis in range(3):
             for d in (-1, 1):
-                idx = {n: v(n) for n in ("i", "j", "k")}
-                idx[dim] = dv + d
-                out.append(rd(arr, idx["i"], idx["j"], idx["k"]))
+                idx = [i, j, kk]
+                idx[axis] = idx[axis] + d
+                out.append(arr[idx[0], idx[1], idx[2]])
         return out
 
-    s1 = Statement("sb", ("t", "i", "j", "k"), dom,
-                   sched(("t", "i", "j", "k"), 0, v("t"), 0, v("i"), v("j"), v("k")),
-                   writes=[wr("B", v("i"), v("j"), v("k"))], reads=star("A"))
-    s2 = Statement("sa", ("t", "i", "j", "k"), dom,
-                   sched(("t", "i", "j", "k"), 0, v("t"), 1, v("i"), v("j"), v("k")),
-                   writes=[wr("A", v("i"), v("j"), v("k"))], reads=star("B"))
-    k = Kernel("heat-3d", {}, [load("A", 0, N, N, N), s1, s2,
-                               store("A", 0, N, N, N)])
+    with k.loop("t", 0, T) as t:
+        with k.loop("i", 1, N - 1) as i, k.loop("j", 1, N - 1) as j, \
+                k.loop("k", 1, N - 1) as kk:
+            k.stmt("sb", writes=[B[i, j, kk]], reads=star(A, i, j, kk))
+        with k.loop("i", 1, N - 1) as i, k.loop("j", 1, N - 1) as j, \
+                k.loop("k", 1, N - 1) as kk:
+            k.stmt("sa", writes=[A[i, j, kk]], reads=star(B, i, j, kk))
     # heat-3d has same-t star reads of B (sa reads B[i±1] written by sb at the
     # same t), so the band tiling needs the Pluto-style per-statement time
     # interleave 2t / 2t+1 to stay valid: φ = ((2t+s)/b, (2t+s+i)/b).
-    t_sb = Tiling(((2, 0, 0, 0), (2, 1, 0, 0)), (2 * b, 2 * b), (0, 0))
-    t_sa = Tiling(((2, 0, 0, 0), (2, 1, 0, 0)), (2 * b, 2 * b), (1, 1))
-    return KernelCase(k, {"sb": t_sb, "sa": t_sa}, ("sb", "sa"))
+    k.tile("sb", Tiling(((2, 0, 0, 0), (2, 1, 0, 0)), (2 * b, 2 * b), (0, 0)))
+    k.tile("sa", Tiling(((2, 0, 0, 0), (2, 1, 0, 0)), (2 * b, 2 * b), (1, 1)))
+    return k
 
 
 # ---------------------------------------------------- the paper's Fig. 1 form
@@ -478,19 +440,14 @@ def jacobi_1d_paper(N: int = 16, T: int = 8, b1: int = 4, b2: int = 4) -> Kernel
     """Single-assignment Jacobi-1D exactly as Figure 1 of the paper
     (a[t][i] form, load/compute/store processes, tiling hyperplanes t and
     t+i).  Channels 1-3: load→compute, 4-6: compute→compute, 7: →store."""
-    loadst = Statement("load", ("i",), rng("i", 0, N + 2),
-                       sched(("i",), 0, v("i"), 0),
-                       writes=[wr("a", E(0), v("i"))])
-    comp = Statement("compute", ("t", "i"),
-                     [ge(v("t"), 1), le(v("t"), E(T)), ge(v("i"), 1), le(v("i"), E(N))],
-                     sched(("t", "i"), 1, v("t"), v("i")),
-                     writes=[wr("a", v("t"), v("i"))],
-                     reads=[rd("a", v("t") - 1, v("i") - 1),
-                            rd("a", v("t") - 1, v("i")),
-                            rd("a", v("t") - 1, v("i") + 1)])
-    storest = Statement("store", ("i",), rng("i", 1, N + 1),
-                        sched(("i",), 2, v("i"), 0),
-                        reads=[rd("a", E(T), v("i"))])
-    k = Kernel("jacobi-1d-paper", {}, [loadst, comp, storest])
-    til = {"compute": Tiling(((1, 0), (1, 1)), (b1, b2))}
-    return KernelCase(k, til, ("compute",))
+    k = Nest("jacobi-1d-paper")
+    a = k.array("a", T + 1, N + 2)
+    with k.loop("i", 0, N + 2) as i:
+        k.stmt("load", writes=[a[0, i]])
+    with k.loop("t", 1, T + 1) as t, k.loop("i", 1, N + 1) as i:
+        k.stmt("compute", writes=[a[t, i]],
+               reads=[a[t - 1, i - 1], a[t - 1, i], a[t - 1, i + 1]])
+    with k.loop("i", 1, N + 1) as i:
+        k.stmt("store", reads=[a[T, i]])
+    k.tile("compute", Tiling(((1, 0), (1, 1)), (b1, b2)))
+    return k.case(compute=("compute",))

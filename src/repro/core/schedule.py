@@ -11,9 +11,49 @@ caller has renamed the timestamp expressions into.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Mapping, Sequence
+from typing import Iterable, List, Mapping, Sequence
 
 from .affine import Constraint, LinExpr, eq, lt
+
+# -- program phases ----------------------------------------------------------
+#
+# The leading constant (c0) of a 2d+1 global schedule orders whole statement
+# nests.  Boundary processes live in dedicated phases around the computation:
+#
+#     prologue (loads)  ≪  body (compute, c0 = 0 .. n-1)  ≪  epilogue (stores)
+#
+# The prologue sits at a fixed c0 = -1 (every body phase is non-negative);
+# the epilogue's c0 is the first constant after the body phases — computed
+# from the program, not a magic sentinel (this replaces the old
+# ``BIG = 10**6`` hack that polybench.py hand-rolled).  Within a phase,
+# boundary processes are ordered by their registration rank, which
+# `boundary_schedule` makes the second schedule component — so the ordering
+# holds under ANY tiling: tile coordinates are spliced *after* c0
+# (`Process.global_ts`), and the phase constants never tie.
+
+#: leading schedule constant of every prologue (load) process
+PROLOGUE_C0 = -1
+
+#: conservative epilogue c0 for legacy callers that cannot know the body
+#: span (the deprecated ``polybench.store`` shim predates phase derivation);
+#: programs compiled by `repro.lang` use the exact `epilogue_c0` of their
+#: own body instead — only the ORDER of the leading constants is meaningful
+LEGACY_EPILOGUE_C0 = 10 ** 6
+
+
+def epilogue_c0(body_c0s: Iterable[int]) -> int:
+    """First c0 strictly after every body phase: epilogue (store) processes
+    scheduled here sort after the whole computation, under any tiling."""
+    return max(body_c0s, default=-1) + 1
+
+
+def boundary_schedule(dims: Sequence[str], c0: int, rank: int) -> "AffineSchedule":
+    """``(c0, rank, *dims)`` — the global timestamp of a boundary process:
+    phase constant first, registration rank second, then its own counters."""
+    return AffineSchedule(
+        tuple(dims),
+        [LinExpr.const_expr(c0), LinExpr.const_expr(rank)]
+        + [LinExpr.var(d) for d in dims])
 
 
 @dataclass

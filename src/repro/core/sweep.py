@@ -79,13 +79,15 @@ def sweep(kernel: Union[Kernel, PPN, Any],
     """Analyze one kernel under every tiling configuration in ``tilings``.
 
     ``kernel`` is anything `analyze` accepts (a `Kernel`, a prebuilt `PPN`,
-    or a polybench `KernelCase` — the case's own tiling is ignored here; the
-    swept configurations come from ``tilings``).  Each configuration maps
-    process names to `Tiling`s exactly like `PPN.from_kernel`; unmapped
-    processes are untiled.  Returns one `AnalysisReport` per configuration,
-    in order, each identical to a fresh ``analyze(kernel, tilings=cfg)``
-    running the same stages.
+    a polybench `KernelCase`, or a `repro.lang` builder program — a case's
+    or program's own tiling is ignored here; the swept configurations come
+    from ``tilings``).  Each configuration maps process names to `Tiling`s
+    exactly like `PPN.from_kernel`; unmapped processes are untiled.  Returns
+    one `AnalysisReport` per configuration, in order, each identical to a
+    fresh ``analyze(kernel, tilings=cfg)`` running the same stages.
     """
+    if hasattr(kernel, "__kernelcase__"):
+        kernel = kernel.__kernelcase__()    # lang program → compiled case
     if hasattr(kernel, "kernel") and hasattr(kernel, "tilings"):
         kernel = kernel.kernel          # a KernelCase; sweep supplies tilings
     base = analyze(kernel, params=params)      # dataflow oracle runs ONCE

@@ -135,6 +135,8 @@ def test_plan_rejects_unknown_topology():
 
 
 def test_deprecated_shims_warn_exactly_once():
+    from repro.core.polybench import load, rng, sched, store
+
     case = get("gemm")
     ppn = PPN.from_kernel(case.kernel, tilings=case.tilings)
     ch = ppn.channels[0]
@@ -145,6 +147,11 @@ def test_deprecated_shims_warn_exactly_once():
         lambda: channel_capacity(ppn, ch),
         lambda: size_channels(ppn),
         lambda: fifoize(ppn),
+        # legacy raw-spec authoring helpers, superseded by repro.lang.Nest
+        lambda: load("Q", 0, 4),
+        lambda: store("Q", 0, 4),
+        lambda: sched(("i",), 0, "i"),
+        lambda: rng("i", 0, 4),
     ]
     with warnings.catch_warnings(record=True) as caught:
         warnings.simplefilter("always")
@@ -153,4 +160,23 @@ def test_deprecated_shims_warn_exactly_once():
             call()          # second call must stay silent
     dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
     assert len(dep) == len(shim_calls)
-    assert all("deprecated" in str(w.message) for w in dep)
+    assert all("deprecated" in str(w.message) or "legacy" in str(w.message)
+               for w in dep)
+    # every warning must name its replacement (the lang shims point at Nest)
+    assert sum("repro.lang.Nest" in str(w.message) for w in dep) == 4
+
+
+def test_legacy_boundary_shims_match_lang_phases():
+    """The deprecated load/store helpers now sit on the schedule.py phase
+    constants: a shim-built load is schedule-identical to a lang-derived
+    one, and the store epilogue comes from `core.schedule`, not a local
+    magic number."""
+    from repro.core import PROLOGUE_C0
+    from repro.core.polybench import load, store
+    from repro.core.schedule import LEGACY_EPILOGUE_C0
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        ld, st_ = load("Q", 2, 4, 4), store("Q", 1, 4)
+    assert ld.schedule.eval({"l0": 1, "l1": 3}) == (PROLOGUE_C0, 2, 1, 3)
+    assert st_.schedule.eval({"s0": 2}) == (LEGACY_EPILOGUE_C0, 1, 2)

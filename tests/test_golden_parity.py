@@ -1,0 +1,65 @@
+"""Golden parity: the `repro.lang`-authored PolyBench suite vs the recorded
+pre-migration reports.
+
+The fixtures under ``tests/fixtures/reports/`` were recorded from the
+original hand-assembled `Statement` tables (raw 2d+1 schedules, `BIG`
+epilogue constant) immediately before the migration to the declarative
+frontend: one full ``classify → fifoize → size(pow2) → plan(sequential)``
+report per kernel, serialized with ``report_payload`` (execution
+diagnostics stripped) as sorted, indented JSON.  Every migrated kernel must
+reproduce its fixture BYTE-identically — patterns, split parts, slots and
+lowerings included.
+
+The fixtures are a historical record of the pre-migration engine; they are
+not meant to be regenerated (a regeneration would just re-record the
+current behaviour and the parity claim would be vacuous).  If a deliberate
+engine change moves the analysis results themselves, re-record with::
+
+    PYTHONPATH=src python - <<'PY'
+    import json, pathlib
+    from repro.core import analyze, report_payload
+    from repro.core.polybench import get, kernel_names, jacobi_1d_paper
+    out = pathlib.Path("tests/fixtures/reports")
+    cases = {n: get(n) for n in kernel_names()}
+    cases["jacobi-1d-paper"] = jacobi_1d_paper()
+    for n, c in cases.items():
+        rep = (analyze(c).classify().fifoize().size(pow2=True)
+               .plan(topology="sequential").report())
+        (out / f"{n}.json").write_text(
+            json.dumps(report_payload(rep), indent=1, sort_keys=True) + "\n")
+    PY
+
+and say so in the commit message.
+"""
+import json
+import pathlib
+
+import pytest
+
+from repro.core import analyze, report_payload
+from repro.core.polybench import get, jacobi_1d_paper, kernel_names
+
+FIXTURES = pathlib.Path(__file__).parent / "fixtures" / "reports"
+
+
+def _payload_json(case) -> str:
+    rep = (analyze(case).classify().fifoize().size(pow2=True)
+           .plan(topology="sequential").report())
+    return json.dumps(report_payload(rep), indent=1, sort_keys=True) + "\n"
+
+
+@pytest.mark.parametrize("name", kernel_names())
+def test_report_byte_identical_to_recorded_fixture(name):
+    assert _payload_json(get(name)) == (FIXTURES / f"{name}.json").read_text()
+
+
+def test_fig1_paper_kernel_byte_identical_to_recorded_fixture():
+    got = _payload_json(jacobi_1d_paper())
+    assert got == (FIXTURES / "jacobi-1d-paper.json").read_text()
+
+
+def test_fixture_set_covers_the_whole_registry():
+    """A kernel added to the registry without a recorded fixture is a hole
+    in the parity net — fail loudly here, not silently."""
+    recorded = {p.stem for p in FIXTURES.glob("*.json")}
+    assert set(kernel_names()) | {"jacobi-1d-paper"} == recorded

@@ -123,3 +123,47 @@ def test_random_ppn_operationally_validates(data):
     for row in validated.validation.channels:
         assert row.peak <= row.slots
         assert row.peak == row.capacity
+
+
+# --------------------------------------------- builder-frontend property --
+
+@given(st.data())
+@settings(deadline=None, max_examples=60)
+def test_random_builder_program_compiles_classifies_and_validates(data):
+    """5. Frontend soundness: ANY well-formed 2-process builder program
+    (affine strided reads against a streamed producer, optional tiling)
+    compiles through `repro.lang`, classifies, and passes
+    `Analysis.validate()` — the planned implementations replay the trace and
+    peak occupancy fits the `size()` slots."""
+    from repro.core import analyze
+    from repro.core.tiling import Tiling
+    from repro.lang import Nest
+
+    n = data.draw(st.integers(1, 8), label="producer trips")
+    m = data.draw(st.integers(1, 10), label="consumer trips")
+    refs = data.draw(st.lists(
+        st.tuples(st.integers(0, 2), st.integers(-2, 2)),
+        min_size=1, max_size=3), label="read (stride, offset) refs")
+    tile = data.draw(st.sampled_from([None, 1, 2, 3]), label="tile size")
+
+    k = Nest("rand-builder")
+    A, B = k.array("A", n), k.array("B", m)
+    k.outputs(B)
+    with k.loop("i", 0, n) as i:
+        k.stmt("prod", writes=[A[i]])
+    with k.loop("j", 0, m) as j:
+        k.stmt("cons", writes=[B[j]],
+               reads=[A[s * j + o] for s, o in refs])
+    if tile is not None:
+        k.tile("prod", Tiling(((1,),), (tile,)))
+        k.tile("cons", Tiling(((1,),), (tile,)))
+
+    assert k.validate() == []
+    kernel = k.build()
+    assert [s.name for s in kernel.statements] == ["prod", "cons", "store_B"]
+
+    validated = analyze(k).classify().size(pow2=True).validate()
+    assert set(validated.patterns) == {c.name for c in validated.ppn.channels}
+    for row in validated.validation.channels:
+        assert row.peak <= row.slots
+        assert row.peak == row.capacity

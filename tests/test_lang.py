@@ -1,0 +1,337 @@
+"""The declarative kernel-authoring frontend (`repro.lang`).
+
+1. Compilation: loop trees become 2d+1 schedules from program order, the
+   declared I/O becomes prologue/epilogue boundary processes, and builder
+   programs flow into `analyze` / `sweep` / the registry directly.
+2. Phase ordering (owned by `core/schedule.py`): load processes sort before
+   every compute instance and store processes after, under ANY tiling — and
+   the epilogue constant is derived from the body, not the old ``BIG``.
+3. Validation: malformed specs are rejected with diagnostics naming the
+   offending statement (non-affine access, out-of-scope iterator, schedule
+   collision, empty domain, and friends) instead of downstream numpy errors.
+"""
+import numpy as np
+import pytest
+
+from repro.core import PROLOGUE_C0, analyze, epilogue_c0, sweep
+from repro.core.ppn import PPN
+from repro.core.sizing import SizingContext
+from repro.core.polybench import get
+from repro.core.registry import KernelCase
+from repro.core.tiling import Tiling, rescale_tilings, unit_tilings
+from repro.lang import AffExpr, Nest, NonAffine, SpecError, check_registry
+
+
+def _jacobi(N=8, T=4) -> Nest:
+    k = Nest("jac")
+    A, B = k.array("A", N), k.array("B", N)
+    k.inputs(A)
+    k.outputs(A)
+    with k.loop("t", 0, T):
+        with k.loop("i", 1, N - 1) as i:
+            k.stmt("sb", writes=[B[i]], reads=[A[i - 1], A[i], A[i + 1]])
+        with k.loop("i", 1, N - 1) as i:
+            k.stmt("sa", writes=[A[i]], reads=[B[i]])
+    return k
+
+
+# ------------------------------------------------------------- compilation
+
+def test_compiles_boundary_body_order_and_2dp1_schedules():
+    k = _jacobi()
+    kernel = k.build()
+    assert [s.name for s in kernel.statements] == [
+        "load_A", "sb", "sa", "store_A"]
+    assert kernel.arrays == {"A": (8,), "B": (8,)}
+    ld, sb, sa, st = kernel.statements
+    # prologue: (c0, rank, dims); body: interleaved 2d+1; epilogue after body
+    assert ld.schedule.exprs[0].const == PROLOGUE_C0
+    assert st.schedule.exprs[0].const == epilogue_c0([0]) == 1
+    assert len(sb.schedule) == 2 * len(sb.dims) + 1 == 5
+    env = {"t": 3, "i": 2}
+    assert sb.schedule.eval(env) == (0, 3, 0, 2, 0)
+    assert sa.schedule.eval(env) == (0, 3, 1, 2, 0)   # program order
+    assert kernel.params == {}
+
+
+def test_build_is_cached_and_invalidated_on_mutation():
+    k = _jacobi()
+    first = k.build()
+    assert k.build() is first
+    k.tile("sb", Tiling(((1, 0), (1, 1)), (2, 2)))
+    assert k.build() is not first
+    assert k.tilings == {"sb": Tiling(((1, 0), (1, 1)), (2, 2))}
+
+
+def test_case_defaults_compute_to_body_statements():
+    case = _jacobi().case()
+    assert isinstance(case, KernelCase)
+    assert case.compute == ("sb", "sa")
+    assert _jacobi().__kernelcase__().compute == ("sb", "sa")
+
+
+def test_derived_inputs_default_first_read_order():
+    """Without `inputs()`, arrays whose first access in program order is a
+    read get a load process, in first-read order; write-first arrays are
+    internal."""
+    N = 6
+    k = Nest("derive")
+    A, B, tmp = k.array("A", N), k.array("B", N), k.array("tmp", N)
+    k.outputs(B)
+    with k.loop("i", 0, N) as i:
+        k.stmt("s0", writes=[tmp[i]], reads=[B[i], A[i]])
+        k.stmt("s1", writes=[B[i]], reads=[tmp[i]])
+    names = [s.name for s in k.build().statements]
+    assert names == ["load_B", "load_A", "s0", "s1", "store_B"]
+
+
+def test_analyze_and_sweep_accept_builder_programs():
+    k = _jacobi()
+    k.tile("sb", Tiling(((1, 0), (1, 1)), (2, 2)))
+    k.tile("sa", Tiling(((1, 0), (1, 1)), (2, 2)))
+    direct = analyze(k).classify().fifoize().size(pow2=True).report()
+    via_case = (analyze(k.case()).classify().fifoize().size(pow2=True)
+                .report())
+    assert direct.channels == via_case.channels
+    # sweep ignores the program's own tiling; configurations come from args
+    cfgs = [unit_tilings(k.tilings), k.tilings]
+    reports = sweep(k, cfgs)
+    assert len(reports) == 2
+    assert reports[1].channels == direct.channels
+
+
+def test_affine_expression_algebra():
+    i = AffExpr.var("i")
+    j = AffExpr.var("j")
+    assert (2 * i + 1 - j).coeffs == {"i": 2, "j": -1}
+    assert (i - 1).const == -1
+    assert ((i + j) * 2).coeffs == {"i": 2, "j": 2}
+    assert isinstance(i * j, NonAffine)
+    assert isinstance(i * 1.5, NonAffine)
+    assert isinstance((i * j) + 1, NonAffine)      # poison absorbs
+    assert isinstance(1 - i * j, NonAffine)
+    assert (i * 2.0).coeffs == {"i": 2}            # integral float is exact
+
+
+# ------------------------------------------- phase ordering (schedule.py)
+
+@pytest.mark.parametrize("name", ["gemm", "gemver", "heat-3d"])
+@pytest.mark.parametrize("b", [1, 2, 8])
+def test_loads_sort_first_stores_sort_last_under_any_tiling(name, b):
+    """Satellite of the BIG→phase migration: under ANY tiling of the body
+    (tile coordinates are spliced after the leading phase constant), every
+    load instance precedes every compute instance, which precedes every
+    store instance, in the global schedule."""
+    case = get(name)
+    ppn = PPN.from_kernel(case.kernel,
+                          tilings=rescale_tilings(case.tilings, b))
+    ctx = SizingContext(ppn)
+    kinds = {"load": [], "store": [], "body": []}
+    for pname in ppn.processes:
+        kind = ("load" if pname.startswith("load_") else
+                "store" if pname.startswith("store_") else "body")
+        kinds[kind].append(pname)
+    assert kinds["load"] and kinds["store"] and kinds["body"]
+
+    def strictly_before(a, bname):
+        jp, jc = ctx.pair_rank(a, bname)
+        return int(jp.max()) < int(jc.min())
+
+    for ld in kinds["load"]:
+        assert all(strictly_before(ld, c) for c in kinds["body"]), ld
+    for st in kinds["store"]:
+        assert all(strictly_before(c, st) for c in kinds["body"]), st
+
+
+def test_epilogue_constant_is_derived_not_big():
+    """The store phase is the first constant after the body phases — the
+    10**6 sentinel is gone from compiled programs."""
+    case = get("gemver")                    # 4 top-level body phases
+    by_name = {s.name: s for s in case.kernel.statements}
+    assert by_name["load_A"].schedule.exprs[0].const == PROLOGUE_C0 == -1
+    assert by_name["store_x"].schedule.exprs[0].const == 4
+    assert by_name["store_w"].schedule.exprs[0].const == 4
+    assert by_name["store_w"].schedule.exprs[1].const == 1   # rank
+    assert epilogue_c0([]) == 0 and epilogue_c0([0, 3]) == 4
+
+
+# ------------------------------------------------------------- validation
+
+def test_rejects_non_affine_access_naming_statement():
+    k = Nest("bad")
+    A = k.array("A", 8, 8)
+    with k.loop("i", 0, 8) as i, k.loop("j", 0, 8) as j:
+        k.stmt("s", writes=[A[i, j]], reads=[A[i * j, j]])
+    with pytest.raises(SpecError, match=r"statement 's': non-affine index"):
+        k.build()
+
+
+def test_rejects_out_of_scope_iterator_naming_statement():
+    k = Nest("bad")
+    A = k.array("A", 8)
+    with k.loop("i", 0, 8) as i:
+        pass
+    with k.loop("j", 0, 8) as j:
+        k.stmt("s", writes=[A[j]], reads=[A[i]])     # i's loop is closed
+    with pytest.raises(SpecError,
+                       match=r"statement 's'.*out-of-scope iterator 'i'"):
+        k.build()
+
+
+def test_rejects_schedule_collision_naming_both_statements():
+    k = Nest("bad")
+    A = k.array("A", 8)
+    with k.loop("i", 0, 8) as i:
+        k.stmt("a", writes=[A[i]], at=0)
+        k.stmt("b", reads=[A[i]], at=0)
+    with pytest.raises(SpecError,
+                       match=r"schedule collision under loop 'i': 'a' and "
+                             r"'b' both at position 0"):
+        k.build()
+
+
+def test_rejects_schedule_collision_of_same_named_siblings():
+    """Two sibling loops may legally share a NAME (gemver's four i-nests do)
+    but never a position — same-named collisions must not slip through."""
+    k = Nest("bad")
+    A = k.array("A", 8)
+    with k.loop("i", 0, 8, at=0) as i:
+        k.stmt("a", writes=[A[i]])
+    with k.loop("i", 0, 8, at=0) as i:
+        k.stmt("b", reads=[A[i]])
+    with pytest.raises(SpecError,
+                       match=r"'i' and 'i' both at position 0"):
+        k.build()
+
+
+def test_rejects_negative_top_level_position_invading_the_prologue():
+    """A top-level at= may not move body statements into the load phase
+    (c0 < 0): a consumer scheduled there could execute before its data is
+    loaded.  INTERIOR positions may go negative freely — they are ordinary
+    2d+1 constants, useful for ordering before auto-positioned siblings."""
+    k = Nest("bad")
+    A = k.array("A", 8)
+    k.inputs(A)
+    with k.loop("i", 0, 8, at=-1) as i:
+        k.stmt("s", reads=[A[i]])
+    with pytest.raises(SpecError,
+                       match=r"'i': top-level position at=-1 is negative"):
+        k.build()
+
+    ok = Nest("ok")
+    B = ok.array("B", 8)
+    with ok.loop("i", 0, 8) as i:
+        ok.stmt("late", writes=[B[i]])
+        ok.stmt("pre", reads=[B[i]], at=-1)      # before its auto sibling
+    assert ok.validate() == []
+    sch = {s.name: s.schedule for s in ok.build().statements}
+    assert sch["pre"].eval({"i": 2}) < sch["late"].eval({"i": 2})
+
+
+def test_array_declaration_invalidates_cached_kernel():
+    k = _jacobi()
+    first = k.build()
+    k.array("X", 4)
+    assert k.build() is not first
+    assert k.build().arrays["X"] == (4,)
+
+
+def test_rejects_empty_domain_naming_statement():
+    k = Nest("bad")
+    A = k.array("A", 8)
+    with k.loop("i", 5, 5) as i:
+        k.stmt("s", writes=[A[i]])
+    with pytest.raises(SpecError,
+                       match=r"statement 's': empty iteration domain"):
+        k.build()
+
+
+def test_collects_multiple_diagnostics_and_more_classes():
+    k = Nest("bad")
+    A = k.array("A", 8, 8)
+    with k.loop("i", 0, 8) as i:
+        k.stmt("s", writes=[A[i]])              # arity mismatch
+        k.stmt("s", writes=[A[i, 0]])           # duplicate name
+    k.tile("ghost", Tiling(((1,),), (2,)))      # unknown tiling target
+    k.tile("s", Tiling(((1, 0),), (2,)))        # width mismatch (1-d stmt)
+    with pytest.raises(SpecError) as err:
+        k.build()
+    text = str(err.value)
+    assert "1 indices for 2-d array 'A'" in text
+    assert "duplicate statement name" in text
+    assert "tiling attached to unknown statement 'ghost'" in text
+    assert "tiling normal (1, 0) has 2 entries for 1 loop dims" in text
+    assert len(err.value.diagnostics) >= 4
+
+
+def test_rejects_shadowing_open_loop_and_validate_collects():
+    k = Nest("bad")
+    A = k.array("A", 8)
+    with k.loop("i", 0, 8) as i:
+        with k.loop("i", 0, 4) as i2:
+            k.stmt("s", writes=[A[i2]])
+    diags = k.validate()
+    assert any("shadows an open loop" in d for d in diags)
+    with pytest.raises(SpecError):
+        k.build()
+
+
+def test_loop_bounds_are_validated_too():
+    k = Nest("bad")
+    A = k.array("A", 8)
+    with k.loop("i", 0, AffExpr.var("q")) as i:   # q is not in scope
+        k.stmt("s", writes=[A[i]])
+    with pytest.raises(SpecError,
+                       match=r"loop 'i'.*out-of-scope iterator 'q'"):
+        k.build()
+
+
+def test_rejects_duplicate_io_declarations():
+    k = Nest("bad")
+    A = k.array("A", 8)
+    k.inputs(A, A)
+    with k.loop("i", 0, 8) as i:
+        k.stmt("s", reads=[A[i]])
+    with pytest.raises(SpecError,
+                       match=r"boundary process 'load_A' duplicated"):
+        k.build()
+
+
+def test_where_clause_free_variable_does_not_blame_loop_iterators():
+    """A where-clause leaking a free variable gets its own out-of-scope
+    diagnostic plus an unbounded-direction one — never a false 'iterator i
+    unbounded' against the well-bounded loop."""
+    from repro.core.affine import ge, v
+    k = Nest("bad")
+    A = k.array("A", 8)
+    with k.loop("i", 0, 8) as i:
+        k.stmt("s", writes=[A[i]], where=[ge(v("q"), 0)])
+    diags = k.validate()
+    assert any("out-of-scope iterator 'q'" in d for d in diags)
+    assert any("unbounded direction" in d for d in diags)
+    assert not any("iterator 'i' unbounded" in d for d in diags)
+
+
+def test_valid_spec_has_no_diagnostics():
+    assert _jacobi().validate() == []
+
+
+# --------------------------------------------------------------- registry
+
+def test_registry_check_passes_on_builtin_suite():
+    assert check_registry() == []
+
+
+def test_registry_check_cli_smoke():
+    from repro.lang.__main__ import main
+    assert main(["--check-registry"]) == 0
+    assert main(["--check-registry", "gemm", "jacobi-1d"]) == 0
+
+
+def test_registry_check_reports_broken_case():
+    from repro.lang.check import check_case
+    case = get("gemm")
+    broken = KernelCase(case.kernel, dict(case.tilings),
+                        compute=("init", "nonesuch"))
+    fails = check_case("gemm", broken)
+    assert any("compute process 'nonesuch'" in f for f in fails)
