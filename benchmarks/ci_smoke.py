@@ -19,10 +19,15 @@ Five sections, in order:
    post-FIFOIZE — every verdict replayed on the runtime simulator (positive
    and negative directions) and peak occupancy checked against `size()`
    slots, within ``VALIDATE_BUDGET`` of the analysis it checks.
-4. **Persistent store**: if ``REPRO_POLY_CACHE`` is set (CI wires it to an
+4. **Pallas smoke**: `Analysis.compile(backend="pallas")` on jacobi-1d in
+   interpret mode — the generated VMEM-ring kernel must match the oracle,
+   an undersized ring must diverge, and the planned traces must replay
+   green through the pallas backend (`validate(backend="pallas")`), all
+   within ``PALLAS_BUDGET`` seconds.
+5. **Persistent store**: if ``REPRO_POLY_CACHE`` is set (CI wires it to an
    `actions/cache` path), the verdict store is loaded here — warming the
    domain-enumeration boxes for the next section — and saved again at exit.
-5. **Table2 subset**: classifications must match the recorded
+6. **Table2 subset**: classifications must match the recorded
    BENCH_table2.json rows exactly and stay within GUARD_FACTOR of the
    recorded wall-clock.
 """
@@ -50,6 +55,11 @@ SWEEP_BUDGET = 0.6        # sweep must cost ≤ 0.6× the naive per-tiling loop
 
 VALIDATE_BUDGET = 1.5     # validate() must cost ≤ 1.5× the analysis itself
                           # (measured ~0.4× — vectorized trace replays)
+
+PALLAS_BUDGET = 120.0     # seconds for the whole interpret-mode pallas
+                          # section (measured ~15s on CI-class CPUs: the
+                          # interpreter pays per grid step, so the smoke
+                          # geometry is deliberately tiny)
 
 BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_table2.json"
 CACHE_ENV = "REPRO_POLY_CACHE"
@@ -131,6 +141,47 @@ def validate_smoke(failures: list) -> None:
                         f"the analysis time ({t_an:.3f}s)")
 
 
+def pallas_smoke(failures: list) -> None:
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.runtime import ValidationError
+
+    t0 = time.perf_counter()
+    try:
+        a = (analyze(get("jacobi-1d")).classify().fifoize().size().plan())
+        c = a.compile(backend="pallas", interpret=True)
+        if c.mode != "fifo-ring":
+            failures.append(f"pallas: expected fifo-ring mode, got {c.mode}")
+        steps = block = 16
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(256),
+                        jnp.float32)
+        want = c.program.ref(x, steps)
+        got = c(x, steps, block)
+        if not jnp.allclose(got, want, rtol=1e-5, atol=1e-5):
+            failures.append("pallas: generated kernel diverged from oracle")
+        bad = c(x, steps, block, ring_depth=(steps + 1) // 2)
+        if jnp.allclose(bad, want, rtol=1e-5, atol=1e-5):
+            failures.append("pallas: undersized ring did NOT corrupt the "
+                            "output — negative direction broken")
+        v = a.validate(backend="pallas").validation
+        replays, rejections = v.replays, v.rejections
+    except ValidationError as e:
+        failures.append(f"pallas: validate(backend='pallas') failed: {e}")
+        replays = rejections = 0
+    except Exception as e:
+        failures.append(f"pallas: {type(e).__name__}: {e}")
+        replays = rejections = 0
+    dt = time.perf_counter() - t0
+    status = "ok" if dt <= PALLAS_BUDGET else "SLOW"
+    print(f"pallas smoke  jacobi-1d fifo-ring + undersized + "
+          f"{replays} replays {rejections} rejections  "
+          f"{dt*1e3:7.1f}ms (budget {PALLAS_BUDGET*1e3:.0f}ms) {status}")
+    if dt > PALLAS_BUDGET:
+        failures.append(f"pallas: {dt:.1f}s exceeds the {PALLAS_BUDGET}s "
+                        f"interpret-mode budget")
+
+
 def table2_smoke(failures: list) -> None:
     doc = json.loads(BENCH_PATH.read_text())
     recorded = {r["kernel"]: r for r in doc["optimized"]}
@@ -162,14 +213,17 @@ def main() -> int:
         sweep_smoke(failures)
         # 3. operational validation of the same kernels, pre/post-FIFOIZE
         validate_smoke(failures)
-        # 4. warm start for the remaining sections, refreshed on the way out
+        # 4. generated-kernel path: compile + parity + undersized-ring +
+        #    trace replay through the pallas backend, interpret mode
+        pallas_smoke(failures)
+        # 5. warm start for the remaining sections, refreshed on the way out
         cache_path = os.environ.get(CACHE_ENV)
         if cache_path:
             clear_polyhedron_cache()
             print(f"persistent store: loaded "
                   f"{load_polyhedron_cache(cache_path)} entries "
                   f"from {cache_path}")
-        # 5. table2 classification + timing guard
+        # 6. table2 classification + timing guard
         table2_smoke(failures)
         if cache_path and not failures:
             print(f"persistent store: saved "

@@ -39,10 +39,26 @@ def validate_kernels(kernels) -> None:
                   f" peak {row.peak:4d} <= {row.slots:4d} slots")
 
 
+def backend_smoke() -> None:
+    """One row per registry backend: a lazily-registered backend whose
+    import is broken shows up here by NAME (`available_backends()`), not as
+    a bare ModuleNotFoundError on first use three imports deep."""
+    import time
+
+    from repro.runtime.lowering import available_backends
+
+    t0 = time.perf_counter()
+    status = available_backends()
+    dt = (time.perf_counter() - t0) / max(len(status), 1)
+    for name, state in sorted(status.items()):
+        _emit(f"backend/{name}", dt * 1e6, state)
+
+
 def smoke(validate: bool = False) -> None:
     from . import pipeline_comm, table2_fifo
 
     print("name,us_per_call,derived")
+    backend_smoke()
     for kernel in ("gemm", "jacobi-1d", "seidel-2d"):
         r = table2_fifo.run_kernel(kernel)
         _emit(f"table2/{r['kernel']}", r["seconds"] * 1e6,

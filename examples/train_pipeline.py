@@ -56,6 +56,14 @@ def main():
             print(f"step {i:3d} pipeline loss {float(loss):.5f}")
     print("done — loss decreased across", S, "pipeline stages")
 
+    # same flag, different backend: a backend-qualified lowering name routes
+    # the ring step through the pallas backend's implementations instead
+    qualified = f"pallas:{ring_lowering(plans)}"
+    step_q = pipeline_train_step(stage_fn, loss_head, mesh, "pipe",
+                                 lowering=qualified, lr=0.05)
+    _, loss_q = step_q(params, xs, tgt)
+    print(f"one step via lowering={qualified!r}: loss {float(loss_q):.5f}")
+
 
 if __name__ == "__main__":
     main()

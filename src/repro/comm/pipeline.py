@@ -54,6 +54,17 @@ def ring_lowering(plans: Iterable) -> str:
             else REORDER_BUFFER)
 
 
+def _split_backend(lowering: str) -> Tuple[str, str]:
+    """Parse an optionally backend-qualified lowering name.  The existing
+    ``lowering=`` path accepts ``"ppermute"`` (served by the default
+    ``"jax"`` backend) or ``"pallas:ppermute"`` — same flag, richer values,
+    no parallel knob.  Plan records stay unqualified; the registry decides."""
+    if ":" in lowering:
+        bname, lname = lowering.split(":", 1)
+        return bname, lname
+    return "jax", lowering
+
+
 def _resolve_lowering(lowering: Optional[str], plans, fifo) -> str:
     if isinstance(lowering, bool):
         # a pre-registry caller passing the old fifo flag positionally in
@@ -89,11 +100,12 @@ def pipeline_loss_fn(stage_fn: Callable, loss_head: Callable, mesh: Mesh,
 
     The inter-stage channel implementation is selected through the lowering
     registry: from ``plans`` (`ChannelPlan` records, preferred), an explicit
-    ``lowering`` name, or the deprecated ``fifo`` flag.
+    ``lowering`` name — optionally backend-qualified, e.g.
+    ``"pallas:ppermute"`` — or the deprecated ``fifo`` flag.
     """
     n = mesh.shape[axis]
-    step = backend("jax").implementation(_resolve_lowering(lowering, plans,
-                                                           fifo))
+    bname, lname = _split_backend(_resolve_lowering(lowering, plans, fifo))
+    step = backend(bname).implementation(lname)
 
     def inner(params, xs, targets):
         stage = jax.lax.axis_index(axis)

@@ -309,15 +309,32 @@ class Analysis:
                            [(0, before.value, slots)],
                            lowering_for_pattern(before), slots, topology)
 
-    def validate(self) -> "Analysis":
+    def validate(self, backend: str = "reference") -> "Analysis":
         """Operationally validate every verdict and buffer size: replay each
         channel's dataflow trace through the planned implementation on the
-        reference backend (`repro.runtime`) — positive AND negative
-        directions — and cross-check peak occupancy against `size()` slots.
-        Raises `runtime.validate.ValidationError` on any contradiction."""
+        named registry backend — ``"reference"`` (numpy replay) or
+        ``"pallas"`` (the same traces through VMEM ring kernels) — positive
+        AND negative directions — and cross-check peak occupancy against
+        `size()` slots.  Raises `runtime.validate.ValidationError` on any
+        contradiction."""
         from ..runtime.validate import validate_analysis
         self.ctx.counters["validate_stages"] += 1
-        return self._next("validate", validation=validate_analysis(self))
+        return self._next("validate",
+                          validation=validate_analysis(self, backend))
+
+    def compile(self, backend: str = "pallas", **options):
+        """Compile the planned PPN to executable kernels via the named
+        backend's whole-PPN ``compile`` hook (the pallas backend returns a
+        `CompiledStencil`: the fused VMEM-ring kernel when every plan is
+        cheap, the addressable per-timestep fallback otherwise).  Unlike the
+        stage methods this returns the executable, not an `Analysis` —
+        running kernels is the pipeline's exit, not another stage."""
+        from ..runtime.lowering import backend as _backend
+        b = _backend(backend)
+        if b.compile is None:
+            raise TypeError(f"backend {backend!r} registers channel "
+                            f"lowerings but no whole-PPN compile hook")
+        return b.compile(self, **options)
 
     # ------------------------------------------------------------- report --
 

@@ -5,10 +5,15 @@ operational validation stage (`docs/runtime.md`).
     simulator  — trace-driven reference backend (vectorized replay)
     validate   — `Analysis.validate()`: every verdict executed, both ways
     jax_backend — collective implementations (loaded lazily; imports jax)
+    pallas_backend / pallas_codegen — VMEM-ring kernels: trace replay
+                  through real scratch rings + the whole-PPN compiler
+                  behind `Analysis.compile(backend="pallas")` (lazy; the
+                  `RingOverflow` exception lives there, jax-importing)
 """
 from .lowering import (BROADCAST_REGISTER, CHUNK_SPLIT, DEPTH_SPLIT,
                        FIFO_STREAM, LOWERINGS, PATTERN_LOWERING,
-                       REORDER_BUFFER, Backend, ChannelLowering, backend,
+                       REORDER_BUFFER, Backend, BackendUnavailable,
+                       ChannelLowering, available_backends, backend,
                        backend_names, is_cheap, is_stream,
                        lowering_for_pattern, register_backend,
                        split_lowering)
@@ -18,11 +23,12 @@ from .validate import (ChannelValidation, ValidationError, ValidationReport,
                        validate_analysis)
 
 __all__ = [
-    "BROADCAST_REGISTER", "Backend", "CHUNK_SPLIT", "ChannelLowering",
-    "ChannelTrace", "ChannelValidation", "DEPTH_SPLIT", "FIFO_STREAM",
-    "LOWERINGS", "OrderViolation", "PATTERN_LOWERING", "REORDER_BUFFER",
-    "SimulationError", "ValidationError", "ValidationReport", "backend",
-    "backend_names", "is_cheap", "is_stream", "lowering_for_pattern",
-    "register_backend", "simulate_channel", "split_lowering",
-    "trace_channel", "validate_analysis",
+    "BROADCAST_REGISTER", "Backend", "BackendUnavailable", "CHUNK_SPLIT",
+    "ChannelLowering", "ChannelTrace", "ChannelValidation", "DEPTH_SPLIT",
+    "FIFO_STREAM", "LOWERINGS", "OrderViolation", "PATTERN_LOWERING",
+    "REORDER_BUFFER", "SimulationError", "ValidationError",
+    "ValidationReport", "available_backends", "backend", "backend_names",
+    "is_cheap", "is_stream", "lowering_for_pattern", "register_backend",
+    "simulate_channel", "split_lowering", "trace_channel",
+    "validate_analysis",
 ]

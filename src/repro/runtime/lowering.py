@@ -8,11 +8,13 @@ a classification verdict into an implementation goes through this module:
   comm backend and the docs all read it from here; nothing else may encode
   the mapping.
 * :class:`ChannelLowering` — the interface a backend implements per lowering.
-* :class:`Backend` / :func:`backend` — the registry.  Two backends ship:
-  ``"reference"`` (the trace-driven simulator, `runtime/simulator.py`) and
-  ``"jax"`` (the collective lowerings, `runtime/jax_backend.py`); both are
+* :class:`Backend` / :func:`backend` — the registry.  Three backends ship:
+  ``"reference"`` (the trace-driven simulator, `runtime/simulator.py`),
+  ``"jax"`` (the collective lowerings, `runtime/jax_backend.py`) and
+  ``"pallas"`` (VMEM-idiom kernels, `runtime/pallas_backend.py`); all are
   loaded lazily on first lookup so importing the analysis core never pulls
-  in jax.
+  in jax.  A backend may additionally attach a whole-PPN ``compile`` hook
+  (the pallas backend does — `Analysis.compile(backend="pallas")`).
 
 This module deliberately imports nothing from `repro.core`: the table is
 keyed on the classifier's pattern *values* (the `Pattern` enum is str-valued)
@@ -21,7 +23,7 @@ so `core/analysis.py` can import it without a cycle.
 from __future__ import annotations
 
 import importlib
-from typing import Callable, Dict, Iterator, Tuple
+from typing import Callable, Dict, Iterator, Optional, Tuple
 
 # ------------------------------------------------------------- vocabulary --
 # Lowering names, cheapest first.  These strings ARE the IR: they appear in
@@ -96,13 +98,34 @@ class ChannelLowering:
         return f"{type(self).__name__}[{self.lowering}]"
 
 
+class BackendUnavailable(ImportError):
+    """A lazily-registered backend's module failed to import.  Carries the
+    backend name so a missing optional dependency fails loudly as "backend
+    X is unavailable" instead of a bare `ModuleNotFoundError` three imports
+    deep."""
+
+    def __init__(self, name: str, module: str, reason: BaseException):
+        super().__init__(
+            f"backend {name!r} is unavailable: importing {module!r} failed "
+            f"({type(reason).__name__}: {reason})")
+        self.backend = name
+        self.module = module
+        self.reason = reason
+
+
 class Backend:
     """A named set of `ChannelLowering` implementations, one per vocabulary
-    entry.  Instances live in the module-level registry (`backend()`)."""
+    entry.  Instances live in the module-level registry (`backend()`).
+
+    A backend may also attach a whole-PPN compiler via :attr:`compile` —
+    a callable ``compile(analysis, **options) -> executable`` that turns a
+    planned `Analysis` into runnable kernels (`Analysis.compile` resolves
+    through this hook)."""
 
     def __init__(self, name: str):
         self.name = name
         self._impl: Dict[str, Callable[[], ChannelLowering]] = {}
+        self.compile: Optional[Callable] = None
 
     def register(self, *lowerings: str):
         """Class decorator: register ``cls`` as this backend's implementation
@@ -146,6 +169,7 @@ _REGISTRY: Dict[str, Backend] = {}
 _LAZY_BACKENDS: Dict[str, str] = {
     "reference": "repro.runtime.simulator",
     "jax": "repro.runtime.jax_backend",
+    "pallas": "repro.runtime.pallas_backend",
 }
 
 
@@ -158,13 +182,17 @@ def register_backend(name: str) -> Backend:
 
 
 def backend(name: str) -> Backend:
-    """Look up a backend, importing its module on first use."""
+    """Look up a backend, importing its module on first use.  A lazy module
+    that fails to import raises `BackendUnavailable` naming the backend."""
     got = _REGISTRY.get(name)
     if got is not None and got._impl:
         return got
     module = _LAZY_BACKENDS.get(name)
     if module is not None:
-        importlib.import_module(module)
+        try:
+            importlib.import_module(module)
+        except Exception as e:                # pragma: no cover - env-specific
+            raise BackendUnavailable(name, module, e) from e
     got = _REGISTRY.get(name)
     if got is None:
         raise KeyError(f"no backend {name!r} "
@@ -174,3 +202,22 @@ def backend(name: str) -> Backend:
 
 def backend_names() -> Tuple[str, ...]:
     return tuple(sorted(set(_REGISTRY) | set(_LAZY_BACKENDS)))
+
+
+def available_backends() -> Dict[str, str]:
+    """Import every registered backend and report availability: name →
+    ``"ok"`` or the reason it cannot load.  Surfaced in
+    ``python -m benchmarks.run --smoke`` so a broken lazy import fails
+    loudly with the backend's name, not a bare traceback on first use."""
+    out: Dict[str, str] = {}
+    for name in backend_names():
+        try:
+            b = backend(name)
+            n = sum(1 for _ in b)
+            extra = "+compile" if b.compile is not None else ""
+            out[name] = f"ok ({n} lowerings{extra})"
+        except BackendUnavailable as e:
+            out[name] = f"unavailable: {e.reason!r}"
+        except Exception as e:                # pragma: no cover - defensive
+            out[name] = f"broken: {type(e).__name__}: {e}"
+    return out

@@ -106,9 +106,16 @@ class ValidationReport:
 _SPLITTERS = {DEPTH_SPLIT: split_channel, CHUNK_SPLIT: split_by_tile_pair}
 
 
-def validate_analysis(analysis) -> ValidationReport:
+def validate_analysis(analysis, backend_name: str = "reference"
+                      ) -> ValidationReport:
     """Run the operational checks for every channel of ``analysis``;
     returns the evidence, raises `ValidationError` on any contradiction.
+
+    ``backend_name`` picks the executing registry backend: ``"reference"``
+    (numpy trace replay) or ``"pallas"`` (the same traces run through VMEM
+    ring kernels, interpret-mode off-TPU) — both implement
+    ``run(trace) -> peak`` and raise `OrderViolation` identically, so the
+    positive AND negative directions hold on either.
 
     Uses whatever stages ran: verdicts come from the shared classifier,
     slot counts from `.size()` when present (else the pow2 capacities the
@@ -125,9 +132,9 @@ def validate_analysis(analysis) -> ValidationReport:
     plan_by_name = ({p.name: p for p in analysis.plans}
                     if analysis.plans is not None else {})
     sizes = dict(analysis.sizes) if analysis.sizes is not None else None
-    ref = backend("reference")
+    ref = backend(backend_name)
 
-    report = ValidationReport(ppn.kernel_name, "reference")
+    report = ValidationReport(ppn.kernel_name, backend_name)
     failures: List[str] = []
     for ch in ppn.channels:
         verdict = patterns[ch.name]
