@@ -1,0 +1,161 @@
+"""Self-timed execution benchmark: steps and stall attribution vs buffer
+slack.
+
+    PYTHONPATH=src python -m benchmarks.bench_selftimed
+
+Per target — the stencil kernels (jacobi-1d, jacobi-2d, heat-3d) and the
+cyclic vpp-blocked pipeline ring — the network executes on the self-timed
+engine (`repro.runtime.selftimed`, concurrent policy) at three capacity
+points:
+
+* **planned** — the analysis' own slot counts (`executable_capacities` over
+  exact — not pow2-rounded — sizing for kernels, the planner's per-part
+  tick capacities for the ring); exact sizing keeps the points honest:
+  pow2 rounding can leave enough slack that one slot tighter changes
+  nothing;
+* **planned−1** — every bounded channel one slot tighter: the negative
+  direction, expected to deadlock or slow down (steps↑, stall%↑) with the
+  culprit channel attributed;
+* **planned+25%** — a quarter more slack everywhere: measures how much of
+  the stall time planned capacities leave on the table (little, if the
+  sizing model is right).
+
+Each row records steps, fires, throughput (fires/step), stall%, the busiest
+stalling channel, and — when the point deadlocks — the blocking cycle and
+culprit from the `DeadlockInfo`.  Deadlocks are *detected structurally* in
+bounded time, never waited out; a deadlocking planned point would be a
+sizing bug and fails the run.
+
+Writes BENCH_selftimed.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import repro.core.polybench  # noqa: F401  (populate the kernel registry)
+from repro.core.analysis import analyze
+from repro.core.registry import get
+from repro.comm.planner import PipelineSpec, ring_executable
+from repro.runtime.selftimed import execute_ppn
+from repro.runtime.selftimed.validate import executable_capacities
+
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_selftimed.json"
+
+DESCRIPTION = ("self-timed execution (concurrent policy): steps / stall "
+               "attribution at planned capacities, one slot under, and "
+               "25% over")
+
+KERNELS = ("jacobi-1d", "jacobi-2d", "heat-3d")
+RING = PipelineSpec(stages=4, microbatches=6, chunks=2,
+                    schedule="vpp-blocked")
+
+
+def _slack(caps: Dict[str, Optional[int]], delta_slots: int = 0,
+           scale: float = 1.0) -> Dict[str, Optional[int]]:
+    """Planned capacities shifted by ``delta_slots`` then scaled (rounded
+    up); unbounded (late) channels stay unbounded, bounded ones floor at
+    zero so planned−1 really bites single-slot channels."""
+    out: Dict[str, Optional[int]] = {}
+    for name, s in caps.items():
+        if s is None:
+            out[name] = None
+        else:
+            out[name] = max(0, int(-(-(s + delta_slots) * scale // 1)))
+    return out
+
+
+def _measure(ppn, caps: Dict[str, Optional[int]]) -> Dict[str, object]:
+    t0 = time.perf_counter()
+    rep = execute_ppn(ppn, caps, policy="concurrent", on_deadlock="report")
+    dt = time.perf_counter() - t0
+    stalled = [(c.name, c.stalls) for c in rep.channels if c.stalls]
+    stalled.sort(key=lambda kv: -kv[1])
+    row: Dict[str, object] = {
+        "completed": rep.completed,
+        "steps": rep.steps,
+        "fires": rep.fires,
+        "throughput": round(rep.throughput, 4),
+        "stall_pct": round(100 * rep.stall_ratio, 2),
+        "busiest_stall": (stalled[0][0] if stalled else None),
+        "wall_seconds": round(dt, 4),
+    }
+    if rep.deadlock is not None:
+        row["deadlock"] = {"culprit": rep.deadlock.culprit,
+                           "cycle": rep.deadlock.cycle_channels(),
+                           "step": rep.deadlock.step}
+    return row
+
+
+def _target_rows(label: str, ppn, caps: Dict[str, Optional[int]],
+                 failures: List[str]) -> Dict[str, object]:
+    points = {
+        "planned": _slack(caps),
+        "planned_minus_1": _slack(caps, delta_slots=-1),
+        "planned_plus_25pct": _slack(caps, scale=1.25),
+    }
+    rows = {}
+    for point, c in points.items():
+        rows[point] = _measure(ppn, c)
+    if not rows["planned"]["completed"]:
+        failures.append(f"{label}: planned capacities deadlock — sizing bug")
+    if not rows["planned_plus_25pct"]["completed"]:
+        failures.append(f"{label}: +25% slack deadlocks — engine bug")
+    tight = rows["planned_minus_1"]
+    observed = ((not tight["completed"])
+                or tight["steps"] > rows["planned"]["steps"]
+                or tight["stall_pct"] > rows["planned"]["stall_pct"])
+    if not observed:
+        failures.append(f"{label}: planned-1 went unobserved — capacities "
+                        f"not load-bearing")
+    bounded = sum(1 for s in caps.values() if s is not None)
+    print(f"{label:12s} planned {rows['planned']['steps']:5d} steps "
+          f"{rows['planned']['stall_pct']:5.1f}% stall | -1 "
+          + (f"DEADLOCK@{tight['deadlock']['step']} "
+             f"({tight['deadlock']['culprit']})"
+             if not tight["completed"] else
+             f"{tight['steps']:5d} steps {tight['stall_pct']:5.1f}% stall")
+          + f" | +25% {rows['planned_plus_25pct']['steps']:5d} steps "
+          f"{rows['planned_plus_25pct']['stall_pct']:5.1f}% stall")
+    return {"target": label, "bounded_channels": bounded, "points": rows}
+
+
+def run() -> Dict[str, object]:
+    failures: List[str] = []
+    rows = []
+    for name in KERNELS:
+        a = analyze(get(name)).classify().fifoize().size(pow2=False)
+        rows.append(_target_rows(name, a.ppn, executable_capacities(a),
+                                 failures))
+    ppn, caps = ring_executable(RING)
+    rows.append(_target_rows("ring-vpp", ppn, caps, failures))
+    if failures:
+        raise SystemExit("REFUSING to write results:\n  "
+                         + "\n  ".join(failures))
+    return {
+        "description": DESCRIPTION,
+        "policy": "concurrent",
+        "ring": {"stages": RING.stages, "microbatches": RING.microbatches,
+                 "chunks": RING.chunks, "schedule": RING.schedule},
+        "targets": rows,
+        "host": {"python": platform.python_version(),
+                 "machine": platform.machine(),
+                 "cpus": os.cpu_count()},
+    }
+
+
+def main() -> None:
+    argparse.ArgumentParser(description=__doc__).parse_args()
+    doc = run()
+    BENCH_PATH.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"wrote {BENCH_PATH.name}: {len(doc['targets'])} targets x 3 "
+          f"capacity points")
+
+
+if __name__ == "__main__":
+    main()

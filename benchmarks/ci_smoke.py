@@ -3,7 +3,7 @@ operational validation, with guards.
 
     PYTHONPATH=src python -m benchmarks.ci_smoke
 
-Five sections, in order:
+Seven sections, in order:
 
 1. **Registry check** (`repro.lang.check_registry`, same gate as
    ``python -m repro.lang --check-registry``): every registered kernel spec
@@ -24,10 +24,15 @@ Five sections, in order:
    an undersized ring must diverge, and the planned traces must replay
    green through the pallas backend (`validate(backend="pallas")`), all
    within ``PALLAS_BUDGET`` seconds.
-5. **Persistent store**: if ``REPRO_POLY_CACHE`` is set (CI wires it to an
+5. **Self-timed smoke**: every registered kernel executes to completion on
+   the self-timed engine under its planned capacities (sequential policy),
+   and an injected deadlock — the decode loop's KV feedback channel shrunk
+   below the batch width — must be *detected* as a structural deadlock
+   naming that channel in bounded time, all within ``SELFTIMED_BUDGET``.
+6. **Persistent store**: if ``REPRO_POLY_CACHE`` is set (CI wires it to an
    `actions/cache` path), the verdict store is loaded here — warming the
    domain-enumeration boxes for the next section — and saved again at exit.
-6. **Table2 subset**: classifications must match the recorded
+7. **Table2 subset**: classifications must match the recorded
    BENCH_table2.json rows exactly and stay within GUARD_FACTOR of the
    recorded wall-clock.
 """
@@ -60,6 +65,11 @@ PALLAS_BUDGET = 120.0     # seconds for the whole interpret-mode pallas
                           # section (measured ~15s on CI-class CPUs: the
                           # interpreter pays per grid step, so the smoke
                           # geometry is deliberately tiny)
+
+SELFTIMED_BUDGET = 60.0   # seconds for the self-timed section: ~25k fires
+                          # across every registered kernel (measured ~10s)
+                          # plus one injected deadlock that must be
+                          # DETECTED, not waited out
 
 BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_table2.json"
 CACHE_ENV = "REPRO_POLY_CACHE"
@@ -182,6 +192,47 @@ def pallas_smoke(failures: list) -> None:
                         f"interpret-mode budget")
 
 
+def selftimed_smoke(failures: list) -> None:
+    from repro.core.registry import kernel_names
+    from repro.runtime.selftimed import execute_ppn
+    from repro.runtime.selftimed.validate import executable_capacities
+    from repro.serve.batching import decode_loop_ppn
+
+    t0 = time.perf_counter()
+    fires = done = 0
+    for name in kernel_names():
+        a = analyze(get(name)).classify().fifoize().size(pow2=True)
+        caps = executable_capacities(a)
+        rep = execute_ppn(a.ppn, caps, policy="sequential",
+                          on_deadlock="report")
+        fires += rep.fires
+        if rep.completed:
+            done += 1
+        else:
+            failures.append(f"selftimed/{name}: planned capacities did not "
+                            f"complete: {rep.deadlock.summary()}")
+    # injected deadlock: the decode loop's KV feedback shrunk below the
+    # batch width must be DETECTED (bounded time), naming the channel
+    ppn = decode_loop_ppn(slots=4, steps=8)
+    fb = "decode->decode.state[0]"
+    rep = execute_ppn(ppn, {fb: 3, "prefill->decode.state[0]": 4},
+                      policy="concurrent", on_deadlock="report")
+    if rep.completed:
+        failures.append("selftimed: undersized decode feedback did NOT "
+                        "deadlock — detection broken")
+    elif fb not in (rep.deadlock.cycle_channels() or [rep.deadlock.culprit]):
+        failures.append(f"selftimed: deadlock report blames "
+                        f"{rep.deadlock.culprit!r}, not the shrunk {fb!r}")
+    dt = time.perf_counter() - t0
+    status = "ok" if dt <= SELFTIMED_BUDGET else "SLOW"
+    print(f"selftimed smoke  {done} kernels completed ({fires} fires) + "
+          f"injected deadlock detected  {dt*1e3:7.1f}ms "
+          f"(budget {SELFTIMED_BUDGET*1e3:.0f}ms) {status}")
+    if dt > SELFTIMED_BUDGET:
+        failures.append(f"selftimed: {dt:.1f}s exceeds the "
+                        f"{SELFTIMED_BUDGET}s budget")
+
+
 def table2_smoke(failures: list) -> None:
     doc = json.loads(BENCH_PATH.read_text())
     recorded = {r["kernel"]: r for r in doc["optimized"]}
@@ -216,7 +267,10 @@ def main() -> int:
         # 4. generated-kernel path: compile + parity + undersized-ring +
         #    trace replay through the pallas backend, interpret mode
         pallas_smoke(failures)
-        # 5. warm start for the remaining sections, refreshed on the way out
+        # 5. dataflow-driven execution: every kernel completes self-timed,
+        #    an injected deadlock is detected and attributed
+        selftimed_smoke(failures)
+        # 6. warm start for the remaining sections, refreshed on the way out
         cache_path = os.environ.get(CACHE_ENV)
         if cache_path:
             clear_polyhedron_cache()

@@ -2,6 +2,13 @@
 cache (greedy), with per-step continuous-batching slot management.
 
     PYTHONPATH=src python examples/serve_decode.py [--arch smollm-135m]
+
+``--selftimed`` skips the model entirely and replays the decode loop as a
+cyclic PPN on the self-timed engine (`repro.runtime.selftimed`): the KV
+feedback channel ``decode(s,t) -> decode(s,t+1)`` is executed as a bounded
+queue, the report shows the loop's real frontier occupancy, and
+``--shrink-feedback`` demonstrates the structural deadlock a too-small
+state buffer produces — no jax required.
 """
 import argparse
 import sys
@@ -9,18 +16,38 @@ import time
 
 sys.path.insert(0, "src")
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh
 
-from repro import configs
-from repro.configs.base import reduced
-from repro.models import build
-from repro.models.sharding import Rules
+
+def selftimed(slots: int, steps: int, shrink_feedback: int) -> int:
+    """Replay the decode loop self-timed; returns a process exit code."""
+    from repro.core.analysis import analyze
+    from repro.runtime.selftimed import execute_ppn
+    from repro.runtime.selftimed.validate import executable_capacities
+    from repro.serve.batching import decode_loop_ppn
+
+    ppn = decode_loop_ppn(slots, steps)
+    a = analyze(ppn).classify().size(pow2=True)
+    caps = executable_capacities(a)
+    fb = f"decode->decode.state[0]"
+    if shrink_feedback:
+        caps[fb] = max(0, caps[fb] - shrink_feedback)
+        print(f"shrinking feedback channel {fb} to {caps[fb]} slots")
+    rep = execute_ppn(ppn, caps, policy="concurrent",
+                      record_timeline=True, on_deadlock="report")
+    print(rep.render())
+    return 0 if rep.completed else 1
 
 
 def main(arch: str, new_tokens: int):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    from repro import configs
+    from repro.configs.base import reduced
+    from repro.models import build
+    from repro.models.sharding import Rules
     mesh = Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
     bundle = configs.get(arch)
     cfg = reduced(bundle.model)
@@ -66,5 +93,15 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--selftimed", action="store_true",
+                    help="replay the decode loop as a cyclic PPN on the "
+                         "self-timed engine (no model, no jax)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="--selftimed: batch slots")
+    ap.add_argument("--shrink-feedback", type=int, default=0, metavar="N",
+                    help="--selftimed: shrink the KV feedback channel by N "
+                         "slots and watch the deadlock report")
     args = ap.parse_args()
+    if args.selftimed:
+        sys.exit(selftimed(args.slots, args.new_tokens, args.shrink_feedback))
     main(args.arch, args.new_tokens)

@@ -140,6 +140,69 @@ def analyze_pipeline(spec: PipelineSpec) -> Tuple[PPN, List[ChannelPlan]]:
     return ppn, list(a.plans)
 
 
+def ring_executable(spec: PipelineSpec
+                    ) -> Tuple[PPN, Dict[str, Optional[int]]]:
+    """The planned ring in executable form: the pipeline PPN with split
+    plans expanded into their recovered *parts* — one bounded queue per part
+    at the per-part planned slots, the operational shape the jax ring
+    implements — plus the per-channel capacity map (tick capacities,
+    floored at one slot)."""
+    from ..core.split import split_channel
+    from ..runtime.lowering import CHUNK_SPLIT, DEPTH_SPLIT
+    ppn, plans = analyze_pipeline(spec)
+    splitters = {DEPTH_SPLIT: split_channel, CHUNK_SPLIT: split_by_tile_pair}
+    plan_by = {p.name: p for p in plans}
+    chans: List[Channel] = []
+    caps: Dict[str, Optional[int]] = {}
+    for ch in ppn.channels:
+        plan = plan_by[ch.name]
+        if plan.split:
+            slots = {depth: size for depth, _, size in plan.parts}
+            for part in splitters[plan.lowering](ppn, ch):
+                chans.append(part)
+                caps[part.name] = max(1, int(slots[part.depth]))
+        else:
+            chans.append(ch)
+            caps[ch.name] = max(1, int(plan.buffer_slots))
+    return PPN(ppn.kernel_name, ppn.params, ppn.processes, chans), caps
+
+
+def ring_selftimed(spec: PipelineSpec, policy: str = "concurrent",
+                   shrink: Optional[Dict[str, int]] = None,
+                   record_timeline: bool = False,
+                   on_deadlock: str = "raise"):
+    """Execute the planned pipeline ring *self-timed*: every inter-stage
+    channel a bounded queue at the planner's tick capacity, every stage
+    firing on data availability alone.  This is the operational check for
+    the one topology the trace replay cannot cover — the wraparound channel
+    (``chunks > 1``) makes the process graph cyclic, so whether the planned
+    slots deadlock is a property of the *dynamics*, not of any single
+    channel's trace.
+
+    ``shrink`` overrides planned capacities per (part) channel name (the
+    negative direction: shrinking the wraparound channel must deadlock,
+    naming it).  Returns the `SelfTimedReport`; ``on_deadlock="raise"``
+    raises `DeadlockError` carrying it.
+
+    The check has teeth in both directions: the ``"mixed"`` schedule's
+    flush-order forward channel genuinely needs one slot more than its tick
+    capacity (the tick model shifts each late read independently and misses
+    the consumer-order cascade) — this function observes that as a
+    structural deadlock naming the channel, where the trace replay would
+    happily replay each part."""
+    from ..runtime.selftimed import execute_ppn   # numpy-only, lazy: no
+    exec_ppn, caps = ring_executable(spec)        # comm<->runtime cycle
+    if shrink:
+        unknown = sorted(set(shrink) - set(caps))
+        if unknown:
+            raise KeyError(f"shrink names unknown channel(s) {unknown} "
+                           f"(planned: {sorted(caps)})")
+        caps.update(shrink)
+    return execute_ppn(exec_ppn, caps, policy=policy,
+                       record_timeline=record_timeline,
+                       on_deadlock=on_deadlock)
+
+
 # ===================================================== sequence-parallel halo
 
 @dataclass

@@ -54,7 +54,7 @@ class AnalysisContext:
             "classifier_builds": 0, "sizing_builds": 0,
             "classify_stages": 0, "fifoize_stages": 0,
             "size_stages": 0, "plan_stages": 0, "validate_stages": 0,
-            "retiles": 0,
+            "selftimed_stages": 0, "retiles": 0,
         }
 
     def classifier(self, ppn: PPN) -> ChannelClassifier:
@@ -110,8 +110,9 @@ class ChannelPlan:
 #: `AnalysisReport` JSON format version.  Bump on any field change so
 #: downstream artifacts (BENCH_*.json, the CI cache, saved reports) can
 #: detect drift instead of mis-parsing.  v1 was the unversioned PR-2 format;
-#: v2 added ``schema_version``, ``validation`` and per-plan ``topology``.
-SCHEMA_VERSION = 2
+#: v2 added ``schema_version``, ``validation`` and per-plan ``topology``;
+#: v3 added ``selftimed`` (the self-timed execution evidence).
+SCHEMA_VERSION = 3
 
 
 @dataclass
@@ -128,6 +129,7 @@ class AnalysisReport:
     plans: Optional[List[Dict[str, Any]]]
     cache: Dict[str, Any]
     validation: Optional[Dict[str, Any]] = None   # validate-stage evidence
+    selftimed: Optional[Dict[str, Any]] = None    # self-timed execution
     schema_version: int = SCHEMA_VERSION
 
     def as_dict(self) -> Dict[str, Any]:
@@ -138,6 +140,7 @@ class AnalysisReport:
             "fifoize": self.fifoize, "sizes_pow2": self.sizes_pow2,
             "total_slots": self.total_slots, "plans": self.plans,
             "validation": self.validation,
+            "selftimed": self.selftimed,
             "cache": self.cache,
         }
 
@@ -156,7 +159,8 @@ class AnalysisReport:
                 f"(v1 is the pre-versioning format)")
         return cls(**{f: doc[f] for f in (
             "kernel", "params", "stages", "channels", "fifoize", "sizes_pow2",
-            "total_slots", "plans", "validation", "cache", "schema_version")})
+            "total_slots", "plans", "validation", "selftimed", "cache",
+            "schema_version")})
 
     @classmethod
     def from_json(cls, text: str) -> "AnalysisReport":
@@ -196,6 +200,7 @@ class Analysis:
     sizes_pow2: Optional[bool] = None
     plans: Optional[Tuple[ChannelPlan, ...]] = None
     validation: Optional[Any] = None       # runtime.validate.ValidationReport
+    selftimed: Optional[Any] = None        # selftimed.SelfTimedValidation
 
     # ------------------------------------------------------------- stages --
 
@@ -309,14 +314,33 @@ class Analysis:
                            [(0, before.value, slots)],
                            lowering_for_pattern(before), slots, topology)
 
-    def validate(self, backend: str = "reference") -> "Analysis":
-        """Operationally validate every verdict and buffer size: replay each
-        channel's dataflow trace through the planned implementation on the
-        named registry backend — ``"reference"`` (numpy replay) or
-        ``"pallas"`` (the same traces through VMEM ring kernels) — positive
-        AND negative directions — and cross-check peak occupancy against
-        `size()` slots.  Raises `runtime.validate.ValidationError` on any
-        contradiction."""
+    def validate(self, backend: str = "reference",
+                 mode: str = "trace") -> "Analysis":
+        """Operationally validate every verdict and buffer size.
+
+        mode='trace' — replay each channel's dataflow trace through the
+        planned implementation on the named registry backend —
+        ``"reference"`` (vectorized numpy replay), ``"selftimed"``
+        (per-event queue machines) or ``"pallas"`` (the same traces through
+        VMEM ring kernels) — positive AND negative directions — and
+        cross-check peak occupancy against `size()` slots.
+
+        mode='selftimed' — execute the WHOLE network event-driven under the
+        planned capacities (every channel a bounded back-pressured queue):
+        completion is observed (cyclic nets included), high-water marks are
+        cross-checked against the trace simulator's exact peaks, and on
+        cyclic nets every cycle channel's capacity is shrunk and the
+        deadlock / stall-bound slowdown must name it
+        (`runtime/selftimed/validate.py`; evidence on ``.selftimed``).
+
+        Raises `runtime.validate.ValidationError` on any contradiction."""
+        if mode == "selftimed":
+            from ..runtime.selftimed.validate import selftimed_validate
+            self.ctx.counters["selftimed_stages"] += 1
+            return self._next("selftimed",
+                              selftimed=selftimed_validate(self))
+        if mode != "trace":
+            raise ValueError(f"unknown mode {mode!r} (trace | selftimed)")
         from ..runtime.validate import validate_analysis
         self.ctx.counters["validate_stages"] += 1
         return self._next("validate",
@@ -395,6 +419,8 @@ class Analysis:
                    else [p.as_dict() for p in self.plans]),
             validation=(None if self.validation is None
                         else self.validation.as_dict()),
+            selftimed=(None if self.selftimed is None
+                       else self.selftimed.as_dict()),
             cache=dict(self.ctx.counters,
                        polyhedron=polyhedron_cache_stats()),
         )

@@ -9,6 +9,10 @@ operational validation stage (`docs/runtime.md`).
                   through real scratch rings + the whole-PPN compiler
                   behind `Analysis.compile(backend="pallas")` (lazy; the
                   `RingOverflow` exception lives there, jax-importing)
+    selftimed   — dataflow-driven execution engine: bounded back-pressured
+                  channels, deadlock detection, stall observability
+                  (`Analysis.validate(mode="selftimed")`; loaded lazily as
+                  the ``"selftimed"`` registry backend; `docs/selftimed.md`)
 """
 from .lowering import (BROADCAST_REGISTER, CHUNK_SPLIT, DEPTH_SPLIT,
                        FIFO_STREAM, LOWERINGS, PATTERN_LOWERING,
@@ -18,7 +22,7 @@ from .lowering import (BROADCAST_REGISTER, CHUNK_SPLIT, DEPTH_SPLIT,
                        lowering_for_pattern, register_backend,
                        split_lowering)
 from .simulator import (ChannelTrace, OrderViolation, SimulationError,
-                        simulate_channel, trace_channel)
+                        channel_late_edges, simulate_channel, trace_channel)
 from .validate import (ChannelValidation, ValidationError, ValidationReport,
                        validate_analysis)
 
@@ -28,7 +32,7 @@ __all__ = [
     "FIFO_STREAM", "LOWERINGS", "OrderViolation", "PATTERN_LOWERING",
     "REORDER_BUFFER", "SimulationError", "ValidationError",
     "ValidationReport", "available_backends", "backend", "backend_names",
-    "is_cheap", "is_stream", "lowering_for_pattern", "register_backend",
-    "simulate_channel", "split_lowering", "trace_channel",
-    "validate_analysis",
+    "channel_late_edges", "is_cheap", "is_stream", "lowering_for_pattern",
+    "register_backend", "simulate_channel", "split_lowering",
+    "trace_channel", "validate_analysis",
 ]

@@ -8,13 +8,15 @@ a classification verdict into an implementation goes through this module:
   comm backend and the docs all read it from here; nothing else may encode
   the mapping.
 * :class:`ChannelLowering` — the interface a backend implements per lowering.
-* :class:`Backend` / :func:`backend` — the registry.  Three backends ship:
+* :class:`Backend` / :func:`backend` — the registry.  Four backends ship:
   ``"reference"`` (the trace-driven simulator, `runtime/simulator.py`),
-  ``"jax"`` (the collective lowerings, `runtime/jax_backend.py`) and
-  ``"pallas"`` (VMEM-idiom kernels, `runtime/pallas_backend.py`); all are
-  loaded lazily on first lookup so importing the analysis core never pulls
-  in jax.  A backend may additionally attach a whole-PPN ``compile`` hook
-  (the pallas backend does — `Analysis.compile(backend="pallas")`).
+  ``"jax"`` (the collective lowerings, `runtime/jax_backend.py`),
+  ``"pallas"`` (VMEM-idiom kernels, `runtime/pallas_backend.py`) and
+  ``"selftimed"`` (per-event queue machines + the dataflow-driven engine,
+  `runtime/selftimed/`); all are loaded lazily on first lookup so importing
+  the analysis core never pulls in jax.  A backend may additionally attach
+  a whole-PPN ``compile`` hook (the pallas and selftimed backends do —
+  `Analysis.compile(backend=...)`).
 
 This module deliberately imports nothing from `repro.core`: the table is
 keyed on the classifier's pattern *values* (the `Pattern` enum is str-valued)
@@ -170,6 +172,7 @@ _LAZY_BACKENDS: Dict[str, str] = {
     "reference": "repro.runtime.simulator",
     "jax": "repro.runtime.jax_backend",
     "pallas": "repro.runtime.pallas_backend",
+    "selftimed": "repro.runtime.selftimed",
 }
 
 

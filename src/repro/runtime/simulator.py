@@ -81,10 +81,19 @@ class ChannelTrace:
     pops: np.ndarray                # per-edge push position, pop order
 
     @property
+    def late_mask(self) -> np.ndarray:
+        """Per-edge mask of the non-serializable edge set: reads ranked at
+        or before their write.  This is THE exemption set — trace replay
+        counts these instead of failing them, and the self-timed engine's
+        occupancy cross-check exempts exactly the same edges
+        (`channel_late_edges`)."""
+        return self.r_rank <= self.w_rank
+
+    @property
     def late_edges(self) -> int:
         """Edges the sequential linearization cannot serialize (read ranked
         at or before its write) — served by blocking in a self-timed run."""
-        return int(np.count_nonzero(self.r_rank <= self.w_rank))
+        return int(np.count_nonzero(self.late_mask))
 
     def peak_occupancy(self) -> int:
         """Max live values during replay: event sweep over (write, last-read)
@@ -129,6 +138,17 @@ def trace_channel(ppn: PPN, ch: Channel,
     pops = push_pos[vinv][np.lexsort((push_pos[vinv], r_rank))]
     return ChannelTrace(ch.name, num_values, n, w_rank, r_rank,
                         value_wrank, value_last_read, pops)
+
+
+def channel_late_edges(ppn: PPN, sizing: Optional[SizingContext] = None
+                       ) -> "dict":
+    """Per-channel late-edge counts for the whole network — the shared
+    exemption set: trace replay reports these per channel (and per split
+    part), and `validate(mode="selftimed")` exempts exactly these channels
+    from the peak-equality cross-check."""
+    sizing = sizing if sizing is not None else SizingContext(ppn)
+    return {ch.name: trace_channel(ppn, ch, sizing).late_edges
+            for ch in ppn.channels}
 
 
 REFERENCE = register_backend("reference")

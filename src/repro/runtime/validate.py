@@ -62,13 +62,19 @@ class ChannelValidation:
     slots: int                      # planned slot count checked against
     rejected: Tuple[str, ...] = ()  # lowerings confirmed to FAIL (negative)
     late: int = 0                   # edges the linearization can't serialize
+    #: the non-serializable edge set broken down per replayed part — for a
+    #: split plan the regenerated parts' counts (previously computed inside
+    #: the replay and dropped), for an unsplit channel {name: late}.  This
+    #: is what lets selftimed and trace replay agree on which edges are
+    #: exempt at part granularity.
+    late_parts: Dict[str, int] = field(default_factory=dict)
 
     def as_dict(self) -> Dict[str, Any]:
         return {"name": self.name, "verdict": self.verdict,
                 "lowering": self.lowering, "parts": self.parts,
                 "peak": self.peak, "capacity": self.capacity,
                 "slots": self.slots, "rejected": list(self.rejected),
-                "late": self.late}
+                "late": self.late, "late_parts": dict(self.late_parts)}
 
 
 @dataclass
@@ -146,11 +152,12 @@ def validate_analysis(analysis, backend_name: str = "reference"
                  else pow2_size(capacity))
         trace = trace_channel(ppn, ch, sizing)
         parts = 1
+        late_parts = {ch.name: trace.late_edges}
         # -- positive: the planned implementation must execute the trace
         try:
             if plan is not None and plan.split:
-                peak = _replay_split_parts(ref, ppn, ch, plan, sizing,
-                                           failures)
+                peak, late_parts = _replay_split_parts(ref, ppn, ch, plan,
+                                                       sizing, failures)
                 parts = len(plan.parts)
             else:
                 peak = ref.implementation(lowering).run(trace)
@@ -171,28 +178,35 @@ def validate_analysis(analysis, backend_name: str = "reference"
         rejected = _negative_checks(ref, trace, verdict, failures)
         report.channels.append(ChannelValidation(
             ch.name, verdict.value, lowering, parts, max(peak, 0), capacity,
-            slots, rejected, trace.late_edges))
+            slots, rejected, sum(late_parts.values()), late_parts))
     if failures:
         raise ValidationError(ppn.kernel_name, failures)
     return report
 
 
 def _replay_split_parts(ref, ppn: PPN, ch: Channel, plan, sizing,
-                        failures: List[str]) -> int:
+                        failures: List[str]) -> Tuple[int, Dict[str, int]]:
     """A split plan executes as one FIFO per recovered part: regenerate the
     parts with the plan's splitter and replay each on a strict queue,
-    checking the per-part slot counts from the plan record."""
+    checking the per-part slot counts from the plan record.  Returns the
+    total peak and the per-part late-edge counts — the regenerated parts'
+    non-serializable edge sets used to be computed here and dropped; now
+    they ride into the report so the selftimed engine exempts the same
+    edges at part granularity."""
     parts = _SPLITTERS[plan.lowering](ppn, ch)
     slots_by_depth = {depth: size for depth, _, size in plan.parts}
     if sorted(slots_by_depth) != sorted(p.depth for p in parts):
         failures.append(f"{ch.name}: split regeneration produced parts "
                         f"{sorted(p.depth for p in parts)} but the plan "
                         f"recorded {sorted(slots_by_depth)}")
-        return -1
+        return -1, {ch.name: trace_channel(ppn, ch, sizing).late_edges}
     fifo = ref.implementation(FIFO_STREAM)
     total = 0
+    late_parts: Dict[str, int] = {}
     for part in parts:
-        peak = fifo.run(trace_channel(ppn, part, sizing))
+        trace = trace_channel(ppn, part, sizing)
+        late_parts[part.name] = trace.late_edges
+        peak = fifo.run(trace)
         cap = _channel_capacity(ppn, part, context=sizing)
         if peak != cap:
             failures.append(f"{part.name}: part replay peak {peak} != "
@@ -201,7 +215,7 @@ def _replay_split_parts(ref, ppn: PPN, ch: Channel, plan, sizing,
             failures.append(f"{part.name}: part peak {peak} exceeds its "
                             f"{slots_by_depth[part.depth]} planned slots")
         total += peak
-    return total
+    return total, late_parts
 
 
 def _negative_checks(ref, trace, verdict: Pattern,

@@ -134,3 +134,44 @@ class ContinuousBatcher:
         while (self.queue or self.slots.active_slots()) and self.steps < max_steps:
             self.run_step()
         return self.completed
+
+
+def decode_loop_ppn(slots: int, steps: int):
+    """The decode loop as a *cyclic* PPN: what the batcher above executes
+    operationally, expressed in the paper's vocabulary so the self-timed
+    engine can replay it.
+
+    Two processes: ``prefill`` fires once per batch slot and seeds its
+    state; ``decode`` fires once per (slot, step), reading the state token
+    its own previous step emitted — the KV-cache feedback ``(s, t) →
+    (s, t+1)`` that makes the process graph cyclic (a self-loop, the
+    smallest SCC).  Decode's local order is step-major ``(t, s)``: the
+    jitted decode step advances ALL batch slots together, so the feedback
+    channel's live frontier is one token per slot and its minimal capacity
+    is exactly ``slots`` — shrinking it below that self-deadlocks the loop
+    (decode blocks on its own full output before it reaches the instance
+    whose pop would free a slot), which is precisely what
+    ``validate(mode="selftimed")``'s negative direction must observe."""
+    from ..core import v
+    from ..core.ppn import PPN, Channel, Process
+    from ..core.schedule import AffineSchedule
+
+    ss, tt = np.meshgrid(np.arange(slots), np.arange(steps), indexing="ij")
+    pts = np.stack([ss.ravel(), tt.ravel()], axis=1)        # (S·T, 2)
+    sched = AffineSchedule(("s", "t"), [v("t") * slots + v("s")])
+    procs = {
+        "prefill": Process("prefill", ("s",),
+                           AffineSchedule.identity(("s",)),
+                           np.arange(slots)[:, None], stmt_rank=0),
+        "decode": Process("decode", ("s", "t"), sched, pts, stmt_rank=1),
+    }
+    seed = np.arange(slots)[:, None]
+    first = np.concatenate([seed, np.zeros_like(seed)], axis=1)
+    fb_src = pts[pts[:, 1] < steps - 1]
+    fb_dst = fb_src.copy()
+    fb_dst[:, 1] += 1
+    chans = [
+        Channel("prefill", "decode", 0, "state", seed, first),
+        Channel("decode", "decode", 0, "state", fb_src, fb_dst),
+    ]
+    return PPN("serve-decode", {}, procs, chans)

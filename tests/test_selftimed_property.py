@@ -1,0 +1,72 @@
+"""Property-based check of the self-timed engine on random cyclic PPNs.
+
+For a randomly shaped 2–3-process loop (a prefill seeder, a decode process
+with a step-major self-loop, optionally a sink) the live frontier of the
+feedback channel is exactly the batch width ``slots`` — decode's local
+order pushes all step-``t`` tokens before popping any step-``t+1`` token.
+The engine must therefore satisfy, for EVERY capacity and policy:
+
+* completion  ⇔  feedback capacity ≥ ``slots`` (the exact peak);
+* on deadlock, the structural report names a channel on the blocking
+  cycle (never hangs, never blames an innocent);
+* on completion, the measured high-water mark IS the exact peak and every
+  fire is accounted for.
+
+Deterministic boundary cases live in ``test_selftimed.py``; this module
+lets hypothesis hunt the shape space and is skipped where hypothesis is
+not installed (it is in requirements-dev.txt, so CI runs it).
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import v  # noqa: E402
+from repro.core.ppn import PPN, Channel, Process  # noqa: E402
+from repro.core.schedule import AffineSchedule  # noqa: E402
+from repro.runtime.selftimed import (cycle_channels,  # noqa: E402
+                                     execute_ppn)
+from repro.serve.batching import decode_loop_ppn  # noqa: E402
+
+FEEDBACK = "decode->decode.state[0]"
+
+
+def _loop(slots, steps, tail):
+    ppn = decode_loop_ppn(slots, steps)
+    if not tail:
+        return ppn
+    ss, tt = np.meshgrid(np.arange(slots), np.arange(steps), indexing="ij")
+    pts = np.stack([ss.ravel(), tt.ravel()], axis=1)
+    sched = AffineSchedule(("s", "t"), [v("t") * slots + v("s")])
+    procs = dict(ppn.processes)
+    procs["emit"] = Process("emit", ("s", "t"), sched, pts, stmt_rank=2)
+    chans = list(ppn.channels) + [Channel("decode", "emit", 0, "tok",
+                                          pts, pts)]
+    return PPN(ppn.kernel_name, ppn.params, procs, chans)
+
+
+@settings(max_examples=60, deadline=None)
+@given(slots=st.integers(1, 5),
+       steps=st.integers(2, 6),
+       extra=st.integers(-2, 3),
+       tail=st.booleans(),
+       policy=st.sampled_from(["sequential", "concurrent"]))
+def test_completion_iff_capacity_covers_the_exact_peak(slots, steps, extra,
+                                                       tail, policy):
+    ppn = _loop(slots, steps, tail)
+    cap = max(0, slots + extra)
+    caps = {ch.name: None for ch in ppn.channels}
+    caps[FEEDBACK] = cap
+    rep = execute_ppn(ppn, caps, policy=policy, on_deadlock="report")
+    assert rep.completed == (cap >= slots)
+    if rep.completed:
+        assert rep.fires == rep.total_instances
+        assert rep.channel(FEEDBACK).high_water == slots
+        assert rep.deadlock is None
+    else:
+        dl = rep.deadlock
+        assert dl is not None
+        assert set(dl.cycle_channels()) & set(cycle_channels(ppn))
+        assert dl.culprit == FEEDBACK
+        assert rep.fires < rep.total_instances
