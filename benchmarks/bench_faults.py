@@ -1,0 +1,207 @@
+"""Fault-injection benchmark: guard overhead, the full fault matrix, and
+recovery latency vs fault rate.
+
+    PYTHONPATH=src python -m benchmarks.bench_faults
+
+Three sections:
+
+* **overhead** — the stencil kernels (jacobi-1d, jacobi-2d, heat-3d)
+  execute plain (`execute_ppn`, no hooks) and guarded (`run_guarded` with
+  an empty `FaultPlan`: sequence tags, checksums and the watchdog armed
+  but nothing injected).  Guards must cost < ``OVERHEAD_BUDGET`` (10%)
+  wall-clock; best-of-``REPS`` timings keep the ratio honest on a noisy
+  host.  ``guard_events`` (tagged pushes+pops) is recorded as the
+  denominator — overhead per observation, not just per run.
+
+* **matrix** — `Analysis.validate(mode="faults")`'s evidence for every
+  registry kernel: each fault kind × guard mode injected into a live
+  guarded run (engine layer) and scrambled into recorded traces (trace
+  layer).  Every injected fault must be detected and either recovered
+  with oracle-matching outputs or loudly named — `faults_validate` raises
+  on any contradiction, which fails the bench.
+
+* **latency** — jacobi-1d under seeded multi-fault plans of increasing
+  size (1..8 faults drawn via `FaultPlan.random`).  Records recovery
+  latency (extra engine steps vs the fault-free run), watchdog ticks,
+  wall time, and the recovered fraction.  The no-hang/no-silent-answer
+  contract must hold at every rate: a run either matches the oracle or
+  names what it could not heal.
+
+Writes BENCH_faults.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import repro.core.polybench  # noqa: F401  (populate the kernel registry)
+from repro.core.analysis import analyze
+from repro.core.registry import get, kernel_names
+from repro.runtime.selftimed import execute_ppn
+from repro.runtime.selftimed.validate import executable_capacities
+from repro.runtime.resilience import (FaultPlan, channel_lowerings,
+                                      faults_validate, run_guarded)
+
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_faults.json"
+
+DESCRIPTION = ("channel guards: fault-free overhead vs plain execution, "
+               "detect/recover matrix over the kernel registry, recovery "
+               "latency vs fault rate")
+
+OVERHEAD_KERNELS = ("jacobi-1d", "jacobi-2d", "heat-3d")
+OVERHEAD_BUDGET = 0.10    # guarded may cost ≤ 10% over plain execution
+REPS = 5                  # best-of timings (min filters scheduler noise)
+
+LATENCY_KERNEL = "jacobi-1d"
+FAULT_COUNTS = (1, 2, 4, 8)
+LATENCY_SEED = 7          # base seed for the random fault draws
+
+
+def _planned(name: str):
+    a = analyze(get(name)).classify().fifoize().size(pow2=True)
+    return a, executable_capacities(a), channel_lowerings(a)
+
+
+def _best(fn, reps: int = REPS) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _overhead_row(name: str, failures: List[str]) -> Dict[str, object]:
+    a, caps, lows = _planned(name)
+    empty = FaultPlan()
+    plain = _best(lambda: execute_ppn(a.ppn, caps, policy="sequential"))
+    guarded = _best(lambda: run_guarded(a.ppn, caps, empty, lows,
+                                        policy="sequential"))
+    gr = run_guarded(a.ppn, caps, empty, lows, policy="sequential")
+    if gr.resilience.status != "clean":
+        failures.append(f"{name}: guarded fault-free run not clean: "
+                        f"{gr.resilience.summary()}")
+    overhead = guarded / plain - 1.0
+    status = "ok" if overhead <= OVERHEAD_BUDGET else "SLOW"
+    print(f"{name:12s} plain {plain*1e3:8.2f}ms  guarded "
+          f"{guarded*1e3:8.2f}ms  overhead {100*overhead:+6.2f}% "
+          f"({gr.resilience.guard_events} guard events) {status}")
+    if overhead > OVERHEAD_BUDGET:
+        failures.append(f"{name}: guard overhead {100*overhead:.1f}% "
+                        f"exceeds the {100*OVERHEAD_BUDGET:.0f}% budget")
+    return {"kernel": name,
+            "plain_seconds": round(plain, 6),
+            "guarded_seconds": round(guarded, 6),
+            "overhead_pct": round(100 * overhead, 2),
+            "guard_events": gr.resilience.guard_events,
+            "fires": gr.run.fires}
+
+
+def _matrix_row(name: str, failures: List[str]) -> Optional[Dict[str, object]]:
+    a, _, _ = _planned(name)
+    try:
+        v = faults_validate(a)
+    except Exception as e:  # ValidationError or a harness bug — both fail
+        failures.append(f"{name}: fault matrix failed: {e}")
+        return None
+    d = v.as_dict()
+    print(f"{name:16s} {v.summary()}")
+    return {"kernel": name, "counts": d["counts"],
+            "clean_guard_events": v.clean["guard_events"],
+            "engine_cases": len(v.matrix),
+            "trace_cases": len(v.trace_matrix)}
+
+
+def _draw_plan(ppn, n_faults: int) -> FaultPlan:
+    """``n_faults`` distinct random faults merged into one plan, replay log
+    sized generously so recovery is limited by the guards, not the log."""
+    faults, seen = [], set()
+    seed = LATENCY_SEED
+    while len(faults) < n_faults:
+        f = FaultPlan.random(ppn, seed=seed).faults[0]
+        seed += 1
+        if (f.kind, f.target) in seen:
+            continue
+        seen.add((f.kind, f.target))
+        faults.append(f)
+    return FaultPlan(faults=tuple(faults), seed=LATENCY_SEED,
+                     snapshot_window=4096, watchdog_limit=256)
+
+
+def _latency_rows(failures: List[str]) -> List[Dict[str, object]]:
+    a, caps, lows = _planned(LATENCY_KERNEL)
+    oracle = run_guarded(a.ppn, caps, FaultPlan(), lows, policy="sequential")
+    base_steps = oracle.run.steps
+    rows = []
+    for n in FAULT_COUNTS:
+        plan = _draw_plan(a.ppn, n)
+        t0 = time.perf_counter()
+        gr = run_guarded(a.ppn, caps, plan, lows, policy="sequential",
+                         oracle=oracle)
+        dt = time.perf_counter() - t0
+        r = gr.resilience
+        # the contract at any fault rate: no hang (engine bounds were
+        # honored if we got here), and never a silent wrong answer
+        if r.completed and r.outputs_match is False \
+                and not (r.unrecovered or r.undetected):
+            failures.append(f"{LATENCY_KERNEL} x{n}: outputs diverged with "
+                            f"nothing unrecovered — silent corruption")
+        extra = gr.run.steps - base_steps
+        recovered = len(r.recoveries)
+        print(f"{LATENCY_KERNEL} x{n:2d} faults: {r.status:11s} "
+              f"+{extra:4d} steps  {recovered:2d} recoveries  "
+              f"watchdog {r.watchdog.get('ticks', 0):3d} ticks  "
+              f"{dt*1e3:7.1f}ms")
+        rows.append({"faults": n, "specs": [f.spec() for f in plan.faults],
+                     "status": r.status,
+                     "extra_steps": extra,
+                     "recoveries": recovered,
+                     "swaps": len(r.swaps), "spills": len(r.spills),
+                     "unrecovered": len(r.unrecovered),
+                     "watchdog_ticks": r.watchdog.get("ticks", 0),
+                     "outputs_match": r.outputs_match,
+                     "wall_seconds": round(dt, 4)})
+    return rows
+
+
+def run() -> Dict[str, object]:
+    failures: List[str] = []
+    print("— guard overhead (fault-free) —")
+    overhead = [_overhead_row(k, failures) for k in OVERHEAD_KERNELS]
+    print("— fault matrix —")
+    matrix = [r for name in kernel_names()
+              if (r := _matrix_row(name, failures)) is not None]
+    print("— recovery latency vs fault rate —")
+    latency = _latency_rows(failures)
+    if failures:
+        raise SystemExit("REFUSING to write results:\n  "
+                         + "\n  ".join(failures))
+    return {
+        "description": DESCRIPTION,
+        "overhead_budget_pct": 100 * OVERHEAD_BUDGET,
+        "overhead": overhead,
+        "matrix": matrix,
+        "latency": {"kernel": LATENCY_KERNEL, "seed": LATENCY_SEED,
+                    "rates": latency},
+        "host": {"python": platform.python_version(),
+                 "machine": platform.machine(),
+                 "cpus": os.cpu_count()},
+    }
+
+
+def main() -> None:
+    argparse.ArgumentParser(description=__doc__).parse_args()
+    doc = run()
+    BENCH_PATH.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"wrote {BENCH_PATH.name}: {len(doc['overhead'])} overhead "
+          f"targets, {len(doc['matrix'])} kernels in the matrix, "
+          f"{len(doc['latency']['rates'])} fault rates")
+
+
+if __name__ == "__main__":
+    main()

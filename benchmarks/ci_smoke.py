@@ -3,7 +3,7 @@ operational validation, with guards.
 
     PYTHONPATH=src python -m benchmarks.ci_smoke
 
-Seven sections, in order:
+Eight sections, in order:
 
 1. **Registry check** (`repro.lang.check_registry`, same gate as
    ``python -m repro.lang --check-registry``): every registered kernel spec
@@ -29,10 +29,14 @@ Seven sections, in order:
    and an injected deadlock — the decode loop's KV feedback channel shrunk
    below the batch width — must be *detected* as a structural deadlock
    naming that channel in bounded time, all within ``SELFTIMED_BUDGET``.
-6. **Persistent store**: if ``REPRO_POLY_CACHE`` is set (CI wires it to an
+6. **Faults smoke**: the fault matrix (`Analysis.validate(mode="faults")`)
+   on the same 3 kernels — every injected fault detected and recovered or
+   loudly named, a guarded fault-free run stays clean — within
+   ``FAULTS_BUDGET`` seconds.
+7. **Persistent store**: if ``REPRO_POLY_CACHE`` is set (CI wires it to an
    `actions/cache` path), the verdict store is loaded here — warming the
    domain-enumeration boxes for the next section — and saved again at exit.
-7. **Table2 subset**: classifications must match the recorded
+8. **Table2 subset**: classifications must match the recorded
    BENCH_table2.json rows exactly and stay within GUARD_FACTOR of the
    recorded wall-clock.
 """
@@ -70,6 +74,11 @@ SELFTIMED_BUDGET = 60.0   # seconds for the self-timed section: ~25k fires
                           # across every registered kernel (measured ~10s)
                           # plus one injected deadlock that must be
                           # DETECTED, not waited out
+
+FAULTS_BUDGET = 60.0      # seconds for the fault matrix on the 3 smoke
+                          # kernels: ~16 guarded engine runs + the trace
+                          # replays each (measured ~5s) — recovery must be
+                          # bounded, so a blown budget means a guard loop
 
 BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_table2.json"
 CACHE_ENV = "REPRO_POLY_CACHE"
@@ -233,6 +242,31 @@ def selftimed_smoke(failures: list) -> None:
                         f"{SELFTIMED_BUDGET}s budget")
 
 
+def faults_smoke(failures: list) -> None:
+    from repro.runtime import ValidationError
+
+    t0 = time.perf_counter()
+    engine = wire = recovered = 0
+    for name in KERNELS:
+        a = analyze(get(name)).classify().fifoize().size(pow2=True)
+        try:
+            v = a.validate(mode="faults").resilience
+        except ValidationError as e:
+            failures.append(f"faults/{name}: {e}")
+            continue
+        engine += len(v.matrix)
+        wire += len(v.trace_matrix)
+        recovered += v.recovered
+    dt = time.perf_counter() - t0
+    status = "ok" if dt <= FAULTS_BUDGET else "SLOW"
+    print(f"faults smoke  {engine} engine faults "
+          f"({recovered} recovered/degraded) + {wire} wire faults rejected  "
+          f"{dt*1e3:7.1f}ms (budget {FAULTS_BUDGET*1e3:.0f}ms) {status}")
+    if dt > FAULTS_BUDGET:
+        failures.append(f"faults: {dt:.1f}s exceeds the {FAULTS_BUDGET}s "
+                        f"budget — recovery is supposed to be bounded")
+
+
 def table2_smoke(failures: list) -> None:
     doc = json.loads(BENCH_PATH.read_text())
     recorded = {r["kernel"]: r for r in doc["optimized"]}
@@ -270,14 +304,16 @@ def main() -> int:
         # 5. dataflow-driven execution: every kernel completes self-timed,
         #    an injected deadlock is detected and attributed
         selftimed_smoke(failures)
-        # 6. warm start for the remaining sections, refreshed on the way out
+        # 6. fault matrix: injected faults detected, recovered or named
+        faults_smoke(failures)
+        # 7. warm start for the remaining sections, refreshed on the way out
         cache_path = os.environ.get(CACHE_ENV)
         if cache_path:
             clear_polyhedron_cache()
             print(f"persistent store: loaded "
                   f"{load_polyhedron_cache(cache_path)} entries "
                   f"from {cache_path}")
-        # 6. table2 classification + timing guard
+        # 8. table2 classification + timing guard
         table2_smoke(failures)
         if cache_path and not failures:
             print(f"persistent store: saved "

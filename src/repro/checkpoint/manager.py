@@ -31,7 +31,9 @@ import numpy as np
 
 
 def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists on newer jax; the tree_util
+    # spelling works on every version this repo supports
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat], treedef
 
 
@@ -42,6 +44,16 @@ class CheckpointManager:
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        self.swept = self._sweep_orphans()
+
+    def _sweep_orphans(self) -> List[str]:
+        """Delete ``step_*.tmp`` directories left by a save that died before
+        its atomic publish — they hold partial data and must never be
+        restored from or allowed to shadow a later save of the same step."""
+        orphans = sorted(p.name for p in self.root.glob("step_*.tmp"))
+        for name in orphans:
+            shutil.rmtree(self.root / name, ignore_errors=True)
+        return orphans
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree, extra: Optional[Dict] = None,
@@ -120,9 +132,18 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.root}")
         d = self.root / f"step_{step:09d}"
+        if not d.exists():
+            tmp = self.root / f"step_{step:09d}.tmp"
+            if tmp.exists():
+                raise FileNotFoundError(
+                    f"step {step} only exists as unpublished {tmp.name} — "
+                    f"the save never completed; refusing to restore "
+                    f"partial data")
+            raise FileNotFoundError(f"no checkpoint for step {step} "
+                                    f"under {self.root}")
         meta = json.loads((d / "meta.json").read_text())
         data = np.load(d / "arrays.npz")
-        flat, treedef = jax.tree.flatten_with_path(like_tree)
+        flat, _ = jax.tree_util.tree_flatten_with_path(like_tree)
         keys = {k: i for i, k in enumerate(meta["keys"])}
         leaves = []
         shard_flat = (jax.tree.leaves(shardings) if shardings is not None

@@ -54,7 +54,7 @@ class AnalysisContext:
             "classifier_builds": 0, "sizing_builds": 0,
             "classify_stages": 0, "fifoize_stages": 0,
             "size_stages": 0, "plan_stages": 0, "validate_stages": 0,
-            "selftimed_stages": 0, "retiles": 0,
+            "selftimed_stages": 0, "faults_stages": 0, "retiles": 0,
         }
 
     def classifier(self, ppn: PPN) -> ChannelClassifier:
@@ -111,8 +111,9 @@ class ChannelPlan:
 #: downstream artifacts (BENCH_*.json, the CI cache, saved reports) can
 #: detect drift instead of mis-parsing.  v1 was the unversioned PR-2 format;
 #: v2 added ``schema_version``, ``validation`` and per-plan ``topology``;
-#: v3 added ``selftimed`` (the self-timed execution evidence).
-SCHEMA_VERSION = 3
+#: v3 added ``selftimed`` (the self-timed execution evidence);
+#: v4 added ``resilience`` (the fault-matrix evidence).
+SCHEMA_VERSION = 4
 
 
 @dataclass
@@ -130,6 +131,7 @@ class AnalysisReport:
     cache: Dict[str, Any]
     validation: Optional[Dict[str, Any]] = None   # validate-stage evidence
     selftimed: Optional[Dict[str, Any]] = None    # self-timed execution
+    resilience: Optional[Dict[str, Any]] = None   # fault-matrix evidence
     schema_version: int = SCHEMA_VERSION
 
     def as_dict(self) -> Dict[str, Any]:
@@ -141,6 +143,7 @@ class AnalysisReport:
             "total_slots": self.total_slots, "plans": self.plans,
             "validation": self.validation,
             "selftimed": self.selftimed,
+            "resilience": self.resilience,
             "cache": self.cache,
         }
 
@@ -159,8 +162,8 @@ class AnalysisReport:
                 f"(v1 is the pre-versioning format)")
         return cls(**{f: doc[f] for f in (
             "kernel", "params", "stages", "channels", "fifoize", "sizes_pow2",
-            "total_slots", "plans", "validation", "selftimed", "cache",
-            "schema_version")})
+            "total_slots", "plans", "validation", "selftimed", "resilience",
+            "cache", "schema_version")})
 
     @classmethod
     def from_json(cls, text: str) -> "AnalysisReport":
@@ -201,6 +204,7 @@ class Analysis:
     plans: Optional[Tuple[ChannelPlan, ...]] = None
     validation: Optional[Any] = None       # runtime.validate.ValidationReport
     selftimed: Optional[Any] = None        # selftimed.SelfTimedValidation
+    resilience: Optional[Any] = None       # resilience.ResilienceValidation
 
     # ------------------------------------------------------------- stages --
 
@@ -333,14 +337,28 @@ class Analysis:
         deadlock / stall-bound slowdown must name it
         (`runtime/selftimed/validate.py`; evidence on ``.selftimed``).
 
+        mode='faults' — run the fault matrix: guarded executions with every
+        applicable fault kind injected into representative channels/actors,
+        plus wire-level faulted traces through the guarded channel
+        implementations.  Every fault must be detected and either recovered
+        (outputs equal to a fault-free oracle) or reported with a named
+        culprit — never a silent wrong answer, never a hang
+        (`runtime/resilience/validate.py`; evidence on ``.resilience``).
+
         Raises `runtime.validate.ValidationError` on any contradiction."""
         if mode == "selftimed":
             from ..runtime.selftimed.validate import selftimed_validate
             self.ctx.counters["selftimed_stages"] += 1
             return self._next("selftimed",
                               selftimed=selftimed_validate(self))
+        if mode == "faults":
+            from ..runtime.resilience.validate import faults_validate
+            self.ctx.counters["faults_stages"] += 1
+            return self._next("faults",
+                              resilience=faults_validate(self))
         if mode != "trace":
-            raise ValueError(f"unknown mode {mode!r} (trace | selftimed)")
+            raise ValueError(
+                f"unknown mode {mode!r} (trace | selftimed | faults)")
         from ..runtime.validate import validate_analysis
         self.ctx.counters["validate_stages"] += 1
         return self._next("validate",
@@ -421,6 +439,8 @@ class Analysis:
                         else self.validation.as_dict()),
             selftimed=(None if self.selftimed is None
                        else self.selftimed.as_dict()),
+            resilience=(None if self.resilience is None
+                        else self.resilience.as_dict()),
             cache=dict(self.ctx.counters,
                        polyhedron=polyhedron_cache_stats()),
         )

@@ -153,6 +153,8 @@ def run_cell(arch: str, cell_name: str, multi_pod: bool, out_dir: pathlib.Path,
 
         mem = compiled.memory_analysis()
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, list):        # older jax wraps the dict in a list
+            ca = ca[0] if ca else {}
         txt = compiled.as_text()
         st = hlo_stats.analyze(txt)
         print(mem)

@@ -54,7 +54,9 @@ def init_params(rng, plan):
     Python's hash() is per-process randomized and would make two processes
     initialize different models from the same seed)."""
     import zlib
-    flat, treedef = jax.tree.flatten_with_path(plan, is_leaf=is_pspec)
+    # jax.tree_util spelling: jax.tree.flatten_with_path needs newer jax
+    flat, treedef = jax.tree_util.tree_flatten_with_path(plan,
+                                                         is_leaf=is_pspec)
 
     def one(path, p: PSpec):
         if p.init == "zeros":

@@ -13,6 +13,12 @@ operational validation stage (`docs/runtime.md`).
                   channels, deadlock detection, stall observability
                   (`Analysis.validate(mode="selftimed")`; loaded lazily as
                   the ``"selftimed"`` registry backend; `docs/selftimed.md`)
+    resilience  — fault injection + self-healing channel guards over the
+                  engine's hook seam: seeded `FaultPlan`s, sequence-tag /
+                  checksum / watchdog guards, bounded replay recovery,
+                  FIFO→reorder-buffer hot-swap degradation
+                  (`Analysis.validate(mode="faults")`; loaded lazily;
+                  `docs/resilience.md`)
 """
 from .lowering import (BROADCAST_REGISTER, CHUNK_SPLIT, DEPTH_SPLIT,
                        FIFO_STREAM, LOWERINGS, PATTERN_LOWERING,

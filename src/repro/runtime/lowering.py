@@ -81,6 +81,31 @@ def is_cheap(lowering: str) -> bool:
     return lowering != REORDER_BUFFER
 
 
+#: THE degradation ladder (single source of truth, like PATTERN_LOWERING but
+#: for the runtime direction): when a guard observes a cheap lowering's
+#: ordering contract violated live, this is the lowering it hot-swaps to.
+#: Every cheap entry degrades straight to the addressable reorder buffer —
+#: the one lowering whose semantics need no ordering assumption — and the
+#: reorder buffer has nowhere further to fall (absent from the table).
+DEGRADED_LOWERING: Dict[str, str] = {
+    FIFO_STREAM: REORDER_BUFFER,
+    DEPTH_SPLIT: REORDER_BUFFER,
+    CHUNK_SPLIT: REORDER_BUFFER,
+    BROADCAST_REGISTER: REORDER_BUFFER,
+}
+
+
+def degrade(lowering: str) -> str:
+    """The lowering a runtime guard falls back to when ``lowering``'s
+    ordering contract is violated; raises `KeyError` for lowerings that are
+    already fully addressable (nothing weaker to assume)."""
+    try:
+        return DEGRADED_LOWERING[lowering]
+    except KeyError:
+        raise KeyError(f"lowering {lowering!r} has no degraded form — it "
+                       f"already makes no ordering assumption") from None
+
+
 # --------------------------------------------------------------- interface --
 
 class ChannelLowering:

@@ -72,6 +72,80 @@ class SelfTimedError(RuntimeError):
     """The self-timed execution could not proceed as requested."""
 
 
+class EngineHooks:
+    """Instrumentation/intervention seam for fault injection and runtime
+    guards (`runtime/resilience/`).  Every method is a no-op by default, and
+    the engine only consults a hooks object when one was passed — the plain
+    execution path pays a single ``is None`` test per fire.
+
+    Contract (all indices are engine-internal: ``pi`` a process index,
+    ``ci`` a channel index, ``v`` a value index on that channel):
+
+    * ``bind(engine)`` — called once, after the engine built its channel and
+      adjacency state, before any fire.
+    * ``fire_allowed(engine, pi)`` — gate an otherwise fireable instance; a
+      ``False`` makes the actor refuse work this scheduling opportunity
+      (the engine counts the denial in ``ProcessStats.denials`` and re-polls
+      after subsequent fires and at quiesce).  Must be a pure predicate —
+      it may be called more than once per opportunity.
+    * ``on_push(engine, pi, ci, v)`` — intercept one token emission; returns
+      the deliveries to apply: an iterable of ``(value, op)`` with op
+      ``"deliver"`` (normal visible token) or ``"phantom"`` (occupies a slot
+      but is never visible nor retired — a duplicated token's wire copy).
+      Returning ``()`` drops the token: the consumer will starve on it
+      unless a later intervention redelivers it.
+    * ``on_pop(engine, pi, ci, v)`` — observe one token consumption (guards
+      check sequence tags here).  Must not mutate engine state.
+    * ``on_quiesce(engine, reasons)`` — the engine found no fireable
+      instance with work pending.  ``reasons`` maps blocked process index →
+      ``(kind, ci, v)`` exactly as `DeadlockInfo` reports them (processes
+      parked by ``fire_allowed`` are NOT in it — the hooks object knows
+      its own).  Return ``"continue"`` after mutating state (redelivering a
+      token via `SelfTimedEngine.redeliver`, lifting a capacity, releasing
+      a stalled actor) to resume execution, or ``"deadlock"`` to let the
+      engine build its structural report.  A hooks object returning
+      ``"continue"`` without eventually enabling progress must bound its
+      own interventions (the resilience watchdog does) — the engine trusts
+      it and would otherwise loop.
+
+    Two class attributes let a hooks object opt out of the per-token /
+    per-opportunity calls (read once, after ``bind``):
+
+    * ``gates_fires`` — False means ``fire_allowed`` is never consulted
+      (the hooks object knows it gates nothing this run);
+    * ``inline_wire`` — False means ``on_push``/``on_pop`` are never
+      called; instead the engine appends each token's value index to the
+      hooks' ``push_chan_log[ci]`` / ``pop_chan_log[ci]`` lists (which
+      ``bind`` must create, one per channel).  This is the deferred-
+      verification mode the resilience guards use on fault-free plans:
+      the wire is recorded at C speed and the sequence-tag discipline is
+      checked in one batched pass at finalize instead of per token.
+    """
+
+    #: consult ``fire_allowed`` for every scheduling opportunity
+    gates_fires = True
+    #: call ``on_push``/``on_pop`` per token (False: record to the hooks'
+    #: per-channel ``push_chan_log``/``pop_chan_log`` lists instead)
+    inline_wire = True
+
+    def bind(self, engine: "SelfTimedEngine") -> None:
+        pass
+
+    def fire_allowed(self, engine: "SelfTimedEngine", pi: int) -> bool:
+        return True
+
+    def on_push(self, engine: "SelfTimedEngine", pi: int, ci: int, v: int):
+        return ((v, "deliver"),)
+
+    def on_pop(self, engine: "SelfTimedEngine", pi: int, ci: int,
+               v: int) -> None:
+        pass
+
+    def on_quiesce(self, engine: "SelfTimedEngine",
+                   reasons: Mapping[int, Tuple[str, int, int]]) -> str:
+        return "deadlock"
+
+
 class DeadlockError(SelfTimedError):
     """Structural deadlock: no fireable process, instances pending.
     Carries the full `SelfTimedReport` (``.report``) whose ``.deadlock``
@@ -188,7 +262,8 @@ class SelfTimedEngine:
     def __init__(self, ppn: PPN,
                  capacities: Optional[Mapping[str, Optional[int]]] = None,
                  policy: str = "sequential",
-                 record_timeline: bool = False):
+                 record_timeline: bool = False,
+                 hooks: Optional[EngineHooks] = None):
         if policy not in ("sequential", "concurrent"):
             raise ValueError(f"unknown policy {policy!r} "
                              f"(sequential | concurrent)")
@@ -275,6 +350,19 @@ class SelfTimedEngine:
             [[] for _ in self.procs] if record_timeline else None)
         self._sccs = process_cycles(ppn)
         self._deadlock: Optional[DeadlockInfo] = None
+        self.hooks = hooks
+        if hooks is not None:
+            hooks.bind(self)
+        # flags are read once, after bind (hooks decide per run): skipping
+        # the per-token / per-opportunity calls is what makes the guards'
+        # deferred-verification mode nearly free
+        self._gate = (hooks if hooks is not None and hooks.gates_fires
+                      else None)
+        if hooks is not None and not hooks.inline_wire:
+            self._push_rec = [lst.append for lst in hooks.push_chan_log]
+            self._pop_rec = [lst.append for lst in hooks.pop_chan_log]
+        else:
+            self._push_rec = self._pop_rec = None
 
     # ------------------------------------------------------------ firing --
 
@@ -310,7 +398,13 @@ class SelfTimedEngine:
         whose occupancy dropped (a token retired)."""
         k = self.order[pi][self.pc[pi]]
         freed: List[int] = []
+        hooks = self.hooks
+        rec = self._pop_rec
         for ci, v in self.inputs[pi][k]:
+            if rec is not None:
+                rec[ci](v)
+            elif hooks is not None:
+                hooks.on_pop(self, pi, ci, v)
             c = self.chans[ci]
             c.reads_left[v] -= 1
             if c.reads_left[v] == 0:
@@ -318,18 +412,49 @@ class SelfTimedEngine:
                 freed.append(ci)
         return freed
 
+    def redeliver(self, ci: int, v: int) -> None:
+        """Make value ``v`` of channel ``ci`` visible now — the recovery
+        primitive hooks use to replay a token lost in flight.  Counts as a
+        push (occupancy, high-water) at the current step."""
+        c = self.chans[ci]
+        c.occ += 1
+        c.pushes += 1
+        if c.occ > c.high:
+            c.high = c.occ
+        c.pushed_step[v] = self.steps
+
     def _apply_pushes(self, pi: int, step: int) -> List[Tuple[int, int]]:
         """Emit the next instance's output tokens and advance the pc."""
         k = self.order[pi][self.pc[pi]]
         pushed: List[Tuple[int, int]] = []
+        hooks = self.hooks
+        rec = self._push_rec
         for ci, v in self.outputs[pi][k]:
             c = self.chans[ci]
-            c.occ += 1
-            c.pushes += 1
-            if c.occ > c.high:
-                c.high = c.occ
-            c.pushed_step[v] = step
-            pushed.append((ci, v))
+            if hooks is None:
+                ops = None
+            elif rec is not None:
+                rec[ci](v)
+                ops = None
+            else:
+                ops = hooks.on_push(self, pi, ci, v)
+            if ops is None:
+                c.occ += 1
+                c.pushes += 1
+                if c.occ > c.high:
+                    c.high = c.occ
+                c.pushed_step[v] = step
+                pushed.append((ci, v))
+                continue
+            for val, op in ops:
+                c.occ += 1
+                if c.occ > c.high:
+                    c.high = c.occ
+                if op == "phantom":
+                    continue       # occupies a slot, never becomes visible
+                c.pushes += 1
+                c.pushed_step[val] = step
+                pushed.append((ci, val))
         self.pc[pi] += 1
         ps = self.pstats[pi]
         ps.fires += 1
@@ -358,9 +483,16 @@ class SelfTimedEngine:
         parked: Dict[int, Tuple[str, int, int]] = {}
         value_waiters: Dict[Tuple[int, int], List[int]] = {}
         space_waiters: Dict[int, List[int]] = {}
+        fault_parked: Set[int] = set()   # fire_allowed denials (hooks only)
+        hooks = self.hooks
+        gate = self._gate
 
         def schedule(pi: int) -> None:
             if self.pc[pi] >= self.n_inst[pi]:
+                return
+            if gate is not None and not gate.fire_allowed(self, pi):
+                self.pstats[pi].denials += 1
+                fault_parked.add(pi)
                 return
             r = self._check(pi)
             if r is None:
@@ -378,52 +510,88 @@ class SelfTimedEngine:
         for pi in range(len(self.procs)):
             schedule(pi)
         jmax = -_UNBOUNDED
-        while heap:
-            jr, pi = heapq.heappop(heap)
-            r = self._check(pi)
-            if r is not None:          # invalidated since it was queued
-                parked[pi] = r
-                self._note_stall(pi, r)
-                kind, ci, v = r
-                if kind == "empty":
-                    value_waiters.setdefault((ci, v), []).append(pi)
+        while True:
+            while heap:
+                jr, pi = heapq.heappop(heap)
+                r = self._check(pi)
+                if r is not None:      # invalidated since it was queued
+                    parked[pi] = r
+                    self._note_stall(pi, r)
+                    kind, ci, v = r
+                    if kind == "empty":
+                        value_waiters.setdefault((ci, v), []).append(pi)
+                    else:
+                        space_waiters.setdefault(ci, []).append(pi)
+                    continue
+                if gate is not None and not gate.fire_allowed(self, pi):
+                    self.pstats[pi].denials += 1
+                    fault_parked.add(pi)
+                    continue
+                if jr < jmax:
+                    self.out_of_order.add(pi)
                 else:
-                    space_waiters.setdefault(ci, []).append(pi)
-                continue
-            if jr < jmax:
-                self.out_of_order.add(pi)
-            else:
-                jmax = jr
-            freed = self._apply_pops(pi)
-            pushed = self._apply_pushes(pi, self.steps)
-            self.fires += 1
-            self.steps += 1
-            woken: Set[int] = set()
-            for cv in pushed:
-                woken.update(value_waiters.pop(cv, ()))
-            for ci in set(freed):
-                woken.update(space_waiters.pop(ci, ()))
-            for q in woken:
-                parked.pop(q, None)
-                schedule(q)
-            schedule(pi)
-        if self.fires < self.total:
-            self._deadlock = self._build_deadlock(parked)
+                    jmax = jr
+                freed = self._apply_pops(pi)
+                pushed = self._apply_pushes(pi, self.steps)
+                self.fires += 1
+                self.steps += 1
+                woken: Set[int] = set()
+                for cv in pushed:
+                    woken.update(value_waiters.pop(cv, ()))
+                for ci in set(freed):
+                    woken.update(space_waiters.pop(ci, ()))
+                for q in woken:
+                    parked.pop(q, None)
+                    schedule(q)
+                schedule(pi)
+                if fault_parked:       # a fire may have released a stall
+                    for q in sorted(fault_parked):
+                        if gate.fire_allowed(self, q):
+                            fault_parked.discard(q)
+                            schedule(q)
+            if self.fires >= self.total:
+                return
+            # quiesce: nothing fireable, instances pending.  Hooks may
+            # intervene (redeliver a token, lift a capacity, release an
+            # actor) and ask the engine to carry on; the ready state is
+            # rebuilt from scratch since any channel may have changed.
+            if hooks is None or hooks.on_quiesce(self, dict(parked)) \
+                    != "continue":
+                self._deadlock = self._build_deadlock(parked)
+                return
+            parked.clear()
+            value_waiters.clear()
+            space_waiters.clear()
+            fault_parked.clear()
+            for pi in range(len(self.procs)):
+                schedule(pi)
 
     def _run_concurrent(self) -> None:
         nproc = len(self.procs)
+        hooks = self.hooks
+        gate = self._gate
         while self.fires < self.total:
             fireable: List[int] = []
             blocked: Dict[int, Tuple[str, int, int]] = {}
+            denied: Set[int] = set()
             for pi in range(nproc):
                 if self.pc[pi] >= self.n_inst[pi]:
                     continue
                 r = self._check(pi, snapshot_step=self.steps)
-                if r is None:
-                    fireable.append(pi)
-                else:
+                if r is not None:
                     blocked[pi] = r
+                elif gate is not None and not gate.fire_allowed(self, pi):
+                    self.pstats[pi].denials += 1
+                    denied.add(pi)
+                else:
+                    fireable.append(pi)
             if not fireable:
+                # quiesce: hooks may intervene and burn an idle round
+                # (virtual time passes — a stalled actor's wait elapses).
+                if hooks is not None and \
+                        hooks.on_quiesce(self, dict(blocked)) == "continue":
+                    self.steps += 1
+                    continue
                 self._deadlock = self._build_deadlock(blocked)
                 return
             for pi, reason in blocked.items():
@@ -437,6 +605,7 @@ class SelfTimedEngine:
                 for pi in range(nproc):
                     mark = ("F" if pi in fireable else
                             "." if self.pc[pi] >= self.n_inst[pi] else
+                            "x" if pi in denied else
                             "i" if blocked[pi][0] == "empty" else "o")
                     self.timeline[pi].append(mark)
             self.steps += 1
@@ -535,18 +704,22 @@ def execute_ppn(ppn: PPN,
                 capacities: Optional[Mapping[str, Optional[int]]] = None,
                 policy: str = "sequential",
                 record_timeline: bool = False,
-                on_deadlock: str = "raise") -> SelfTimedReport:
+                on_deadlock: str = "raise",
+                hooks: Optional[EngineHooks] = None) -> SelfTimedReport:
     """Execute ``ppn`` self-timed under ``capacities`` (name → slots; absent
     or ``None`` = unbounded) and return the `SelfTimedReport`.
 
     ``on_deadlock="raise"`` raises `DeadlockError` (carrying the report);
     ``"report"`` returns the report with ``completed=False`` and
     ``.deadlock`` filled in.  Either way detection is structural and runs in
-    bounded time — the engine never busy-waits or hangs."""
+    bounded time — the engine never busy-waits or hangs.  ``hooks`` installs
+    an `EngineHooks` seam (fault injection / runtime guards); the plain path
+    is untouched when it is None."""
     if on_deadlock not in ("raise", "report"):
         raise ValueError(f"on_deadlock={on_deadlock!r} (raise | report)")
     report = SelfTimedEngine(ppn, capacities, policy=policy,
-                             record_timeline=record_timeline).run()
+                             record_timeline=record_timeline,
+                             hooks=hooks).run()
     if not report.completed and on_deadlock == "raise":
         raise DeadlockError(report)
     return report

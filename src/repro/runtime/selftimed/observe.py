@@ -58,6 +58,11 @@ class ProcessStats:
     last_fire: int = -1
     stall_in: int = 0               # parked waiting for a token
     stall_out: int = 0              # parked waiting for a slot
+    #: scheduling opportunities the actor refused (`EngineHooks.fire_allowed`
+    #: returned False) — the observable signature of a stalled/crashed actor
+    #: that the resilience watchdog attributes faults by.  Always 0 without
+    #: hooks.
+    denials: int = 0
     stall_channels: Dict[str, int] = field(default_factory=dict)
 
     @property
@@ -68,7 +73,7 @@ class ProcessStats:
         return {"name": self.name, "instances": self.instances,
                 "fires": self.fires, "first_fire": self.first_fire,
                 "last_fire": self.last_fire, "stall_in": self.stall_in,
-                "stall_out": self.stall_out,
+                "stall_out": self.stall_out, "denials": self.denials,
                 "stall_channels": dict(self.stall_channels)}
 
 

@@ -162,12 +162,20 @@ class FifoQueueSim(ChannelLowering):
 
     def run(self, trace: ChannelTrace) -> int:
         if trace.num_edges != trace.num_values:
-            counts = np.bincount(trace.pops, minlength=trace.num_values)
-            dup = int(np.flatnonzero(counts > 1)[0])
+            counts = np.bincount(trace.pops, minlength=trace.num_values) \
+                if trace.num_edges else np.zeros(trace.num_values, np.int64)
+            dup = np.flatnonzero(counts > 1)
+            if len(dup):
+                d = int(dup[0])
+                raise OrderViolation(
+                    trace.channel,
+                    f"value at push position {d} popped "
+                    f"{int(counts[d])} times — a FIFO pop consumes the head")
+            gap = int(np.flatnonzero(counts == 0)[0])
             raise OrderViolation(
                 trace.channel,
-                f"value at push position {dup} popped "
-                f"{int(counts[dup])} times — a FIFO pop consumes the head")
+                f"gap: value at push position {gap} was pushed but never "
+                f"popped — a FIFO head cannot be skipped")
         regress = np.flatnonzero(np.diff(trace.pops) < 0)
         if len(regress):
             i = int(regress[0])

@@ -28,6 +28,16 @@ log = logging.getLogger("repro.ft")
 
 
 class PreemptionGuard:
+    """Usable as a context manager: handlers are installed on construction
+    and restored on ``__exit__``, so a training loop can write
+
+        with PreemptionGuard() as guard:
+            for step in steps:
+                ...
+                if guard.should_exit:
+                    break
+    """
+
     def __init__(self, signals=(signal.SIGTERM,)):
         self._requested = False
         self._old = {}
@@ -49,6 +59,13 @@ class PreemptionGuard:
     def restore(self):
         for s, h in self._old.items():
             signal.signal(s, h)
+        self._old = {}
+
+    def __enter__(self) -> "PreemptionGuard":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.restore()
 
 
 @dataclass
@@ -73,9 +90,16 @@ class StepWatchdog:
         return is_slow
 
 
-def retrying(fn: Callable, restore_fn: Callable, max_retries: int = 3):
+def retrying(fn: Callable, restore_fn: Callable, max_retries: int = 3,
+             backoff: float = 0.0, max_backoff: float = 30.0,
+             sleep: Callable[[float], None] = time.sleep):
     """Run fn(); on exception call restore_fn() and retry (transient-fault
-    recovery: lost host, flaky interconnect, preempted worker)."""
+    recovery: lost host, flaky interconnect, preempted worker).
+
+    The retry budget is a hard cap — attempt ``max_retries + 1`` re-raises.
+    With ``backoff > 0`` the wait before retry k is
+    ``min(backoff * 2**(k-1), max_backoff)`` (bounded exponential backoff;
+    ``sleep`` is injectable so tests never actually wait)."""
     def wrapped(*a, **kw):
         for attempt in range(max_retries + 1):
             try:
@@ -84,8 +108,15 @@ def retrying(fn: Callable, restore_fn: Callable, max_retries: int = 3):
                 raise
             except Exception as e:
                 if attempt == max_retries:
+                    log.error("step failed (%s); retry budget (%d) "
+                              "exhausted", e, max_retries)
                     raise
+                wait = min(backoff * (2 ** attempt), max_backoff) \
+                    if backoff > 0 else 0.0
                 log.warning("step failed (%s); restoring and retrying "
-                            "(%d/%d)", e, attempt + 1, max_retries)
+                            "(%d/%d, backoff %.2fs)", e, attempt + 1,
+                            max_retries, wait)
                 restore_fn()
+                if wait > 0:
+                    sleep(wait)
     return wrapped

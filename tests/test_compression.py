@@ -9,14 +9,22 @@ import numpy as np
 import pytest
 
 SCRIPT = r"""
+import contextlib
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp
 from repro.optim.compression import (compressed_grad_sync,
                                      compressed_psum_mean,
                                      init_error_feedback)
+from repro.comm.pipeline import _shard_map
 
-mesh = jax.make_mesh((4,), ("dp",), axis_types=(jax.sharding.AxisType.Auto,))
+# tolerate jax versions without AxisType / set_mesh / jax.shard_map
+if hasattr(jax.sharding, "AxisType"):
+    mesh = jax.make_mesh((4,), ("dp",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+else:
+    mesh = jax.make_mesh((4,), ("dp",))
+use_mesh = getattr(jax, "set_mesh", None) or contextlib.nullcontext
 from jax.sharding import PartitionSpec as P
 
 # --- property: compressed mean ≈ exact mean within quantization bound
@@ -25,9 +33,9 @@ def sync(g, e):
 
 g = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
 e0 = jnp.zeros((4, 64))
-f = jax.shard_map(sync, mesh=mesh, in_specs=(P("dp"), P("dp")),
-                  out_specs=(P("dp"), P("dp")), check_vma=False)
-with jax.set_mesh(mesh):
+f = _shard_map(sync, mesh, in_specs=(P("dp"), P("dp")),
+               out_specs=(P("dp"), P("dp")))
+with use_mesh(mesh):
     mean, err = jax.jit(f)(g, e0)
 exact = jnp.broadcast_to(g.mean(0, keepdims=True), g.shape)
 bound = jnp.max(jnp.abs(g)) / 127.0 + 1e-6
@@ -44,11 +52,11 @@ def step(w, t, e):
     mean_g, e = compressed_psum_mean(grad, e, "dp")
     return w - 0.3 * mean_g, e
 
-fstep = jax.shard_map(step, mesh=mesh,
-                      in_specs=(P("dp"), P("dp"), P("dp")),
-                      out_specs=(P("dp"), P("dp")), check_vma=False)
+fstep = _shard_map(step, mesh,
+                   in_specs=(P("dp"), P("dp"), P("dp")),
+                   out_specs=(P("dp"), P("dp")))
 e = jnp.zeros((4, 8))
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     jstep = jax.jit(fstep)
     for _ in range(120):
         w, e = jstep(w, targets, e)

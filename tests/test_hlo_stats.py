@@ -31,7 +31,14 @@ def test_trip_count_scaling():
 def test_xla_cost_analysis_undercounts():
     """Documents WHY the walker exists."""
     c4, c16 = compile_scan(4), compile_scan(16)
-    assert c4.cost_analysis()["flops"] == c16.cost_analysis()["flops"]
+
+    def flops(compiled):
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):        # older jax wraps the dict in a list
+            ca = ca[0]
+        return ca["flops"]
+
+    assert flops(c4) == flops(c16)
 
 
 def test_collective_group_size_parsing():

@@ -1,0 +1,453 @@
+"""Fault-injection harness + self-healing channel guards.
+
+Pins down the resilience contract end to end:
+
+* fault plans are declarative, seeded and reproducible (spec strings,
+  `FaultPlan.random`, trace-level injection);
+* every injected fault is DETECTED by a named guard mechanism, and the run
+  either recovers/degrades with outputs equal to a fault-free oracle or
+  reports a named culprit — never a silent wrong answer, never a hang;
+* the FIFO→reorder-buffer hot-swap degradation is demonstrated end to end
+  with its slot cost accounted;
+* recovery budgets are hard bounds (an undersized snapshot window gives up
+  loudly, the watchdog terminates no-progress loops);
+* the fault matrix rides `Analysis.validate(mode="faults")` and its
+  evidence round-trips through the schema-v4 `AnalysisReport`;
+* the ride-along fault-tolerance satellites behave (`train.ft` context
+  manager + bounded backoff, checkpoint orphan sweep / `.tmp` refusal).
+
+A deterministic seed sweep covers the random-fault property everywhere;
+the hypothesis variant (random 2–3-process chains × random single faults)
+runs where hypothesis is installed (requirements-dev.txt, so CI has it).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import analyze, v
+from repro.core.analysis import SCHEMA_VERSION, AnalysisReport
+from repro.core.polybench import get
+from repro.core.ppn import PPN, Channel, Process
+from repro.core.schedule import AffineSchedule
+from repro.runtime.lowering import (DEGRADED_LOWERING, FIFO_STREAM,
+                                    REORDER_BUFFER, degrade)
+from repro.runtime.resilience import (Fault, FaultPlan, FaultSpecError,
+                                      GuardViolation, ProgressWatchdog,
+                                      audit_trace, channel_lowerings,
+                                      expected_pop_counts, faulted_trace,
+                                      faults_validate, guarded_replay,
+                                      parse_fault, run_guarded)
+from repro.runtime.selftimed import executable_capacities
+from repro.runtime.simulator import trace_channel
+from repro.runtime.validate import ValidationError
+
+
+def _planned(name):
+    return analyze(get(name)).classify().fifoize().size(pow2=True).plan(
+        topology="sequential")
+
+
+@pytest.fixture(scope="module")
+def gemm():
+    a = _planned("gemm")
+    lows = channel_lowerings(a)
+    caps = executable_capacities(a)
+    oracle = run_guarded(a.ppn, caps, FaultPlan(), lows)
+    return a, lows, caps, oracle
+
+
+# ------------------------------------------------------------- fault plans
+
+
+def test_fault_spec_round_trips():
+    for spec in ("drop:a->b.x[0]@5", "stall:compute@3*8",
+                 "corrupt:a->b.x[0]@2*4", "capacity:a->b.x[0]@1*0",
+                 "crash:upd@0"):
+        assert parse_fault(spec).spec() == spec
+
+
+def test_fault_spec_errors_are_loud():
+    for bad in ("nonsense", "bogus:ch@1", "drop:ch@x", "drop:@1"):
+        with pytest.raises(FaultSpecError):
+            parse_fault(bad)
+    with pytest.raises(FaultSpecError):
+        Fault("drop", "ch", at=-1)
+
+
+def test_plan_validates_targets_against_the_network(gemm):
+    a, _, _, _ = gemm
+    names = [c.name for c in a.ppn.channels]
+    procs = list(a.ppn.processes)
+    FaultPlan.parse(["drop:" + names[0], "stall:" + procs[0]]) \
+        .validate_against(names, procs)
+    with pytest.raises(FaultSpecError):
+        FaultPlan.parse(["drop:no-such-channel"]).validate_against(
+            names, procs)
+    with pytest.raises(FaultSpecError):
+        # a process fault must name a process, not a channel
+        FaultPlan.parse(["stall:" + names[0]]).validate_against(names, procs)
+
+
+def test_random_plans_are_seed_deterministic(gemm):
+    a, _, _, _ = gemm
+    for seed in range(8):
+        p1 = FaultPlan.random(a.ppn, seed=seed)
+        p2 = FaultPlan.random(a.ppn, seed=seed)
+        assert p1.faults == p2.faults
+    assert len({FaultPlan.random(a.ppn, seed=s).faults[0].spec()
+                for s in range(16)}) > 1
+
+
+# ----------------------------------------------------- trace-level guards
+
+
+def _trace(a, name):
+    ch = next(c for c in a.ppn.channels if c.name == name)
+    return trace_channel(a.ppn, ch, a.ctx.sizing(a.ppn))
+
+
+def test_faulted_trace_keeps_arrays_coherent(gemm):
+    a, _, _, _ = gemm
+    tr = _trace(a, "init->upd.C[0]")
+    for kind in ("drop", "duplicate", "reorder", "corrupt"):
+        bad = faulted_trace(tr, Fault(kind, tr.channel, at=1))
+        assert len(bad.pops) == len(bad.r_rank) == len(bad.w_rank)
+        assert bad.num_values == tr.num_values
+    with pytest.raises(FaultSpecError):
+        faulted_trace(tr, Fault("capacity", tr.channel, at=1))
+
+
+def test_multiset_audit_names_the_violation(gemm):
+    a, _, _, _ = gemm
+    tr = _trace(a, "init->upd.C[0]")
+    exp = expected_pop_counts(tr)
+    assert audit_trace(tr, exp) is None
+    bad = audit_trace(faulted_trace(tr, Fault("drop", tr.channel, 1)), exp)
+    assert bad.violation == "gap" and bad.channel == tr.channel
+    dup = audit_trace(faulted_trace(tr, Fault("duplicate", tr.channel, 1)),
+                      exp)
+    assert dup.violation == "duplicate"
+
+
+def test_guarded_replay_rejects_wire_faults_on_reference(gemm):
+    a, lows, _, _ = gemm
+    tr = _trace(a, "init->upd.C[0]")
+    exp = expected_pop_counts(tr)
+    assert lows["init->upd.C[0]"] == FIFO_STREAM
+    guarded_replay(tr, FIFO_STREAM, expected=exp)     # clean passes
+    for kind in ("drop", "duplicate", "reorder", "corrupt"):
+        with pytest.raises(GuardViolation) as exc:
+            guarded_replay(faulted_trace(tr, Fault(kind, tr.channel, 1)),
+                           FIFO_STREAM, expected=exp)
+        assert exc.value.channel == tr.channel
+
+
+@pytest.mark.parametrize("backend_name", ("selftimed", "pallas"))
+def test_guarded_replay_rejects_wire_faults_on_other_backends(gemm,
+                                                              backend_name):
+    # the guards sit above the backend registry: the same faulted traces
+    # must be rejected by the per-event queue machines and the pallas
+    # interpret-mode VMEM rings, naming the same culprit
+    a, lows, _, _ = gemm
+    tr = _trace(a, "init->upd.C[0]")
+    exp = expected_pop_counts(tr)
+    guarded_replay(tr, FIFO_STREAM, backend_name, expected=exp)
+    for kind in ("drop", "duplicate", "reorder"):
+        with pytest.raises(GuardViolation) as exc:
+            guarded_replay(faulted_trace(tr, Fault(kind, tr.channel, 1)),
+                           FIFO_STREAM, backend_name, expected=exp)
+        assert exc.value.channel == tr.channel
+
+
+def test_faults_validate_trace_matrix_on_pallas(gemm):
+    from repro.runtime.resilience.validate import faults_validate
+    a, _, _, _ = gemm
+    v = faults_validate(a, trace_backends=("reference", "pallas"))
+    backends = {r["backend"] for r in v.trace_matrix}
+    assert backends == {"reference", "pallas"}
+    assert all(r["detected"] for r in v.trace_matrix)
+
+
+def test_reorder_is_legal_on_an_addressable_buffer_but_drop_is_not(gemm):
+    # the reorder-buffer serves any pop order — only conservation faults
+    # are detectable there, and the multiset audit catches them
+    a, _, _, _ = gemm
+    tr = _trace(a, "load_C->init.C[0]")
+    exp = expected_pop_counts(tr)
+    guarded_replay(faulted_trace(tr, Fault("reorder", tr.channel, 1)),
+                   REORDER_BUFFER, expected=exp)
+    with pytest.raises(GuardViolation) as exc:
+        guarded_replay(faulted_trace(tr, Fault("drop", tr.channel, 1)),
+                       REORDER_BUFFER, expected=exp)
+    assert exc.value.violation == "gap"
+    assert exc.value.mechanism == "multiset-audit"
+
+
+# ------------------------------------------------------- engine-level runs
+
+
+def test_clean_guarded_run_is_clean_and_cheap_on_events(gemm):
+    a, lows, caps, oracle = gemm
+    r = oracle.resilience
+    assert r.status == "clean" and r.completed
+    assert not r.detections and not r.recoveries
+    # every push and pop was observed exactly once
+    assert r.guard_events == 2 * sum(c.num_edges and 1 or 0
+                                     for c in a.ppn.channels) or \
+        r.guard_events > 0
+
+
+@pytest.mark.parametrize("spec,mechanism", [
+    ("drop:init->upd.C[0]@1", "progress-watchdog"),
+    ("duplicate:init->upd.C[0]@1", "sequence-tag"),
+    ("reorder:init->upd.C[0]@1", "sequence-tag"),
+    ("corrupt:init->upd.C[0]@1*3", "checksum"),
+    ("capacity:init->upd.C[0]@1*0", "progress-watchdog"),
+    ("stall:upd@2*3", "progress-watchdog"),
+    ("crash:upd@2", "progress-watchdog"),
+])
+def test_every_fault_kind_is_detected_and_healed(gemm, spec, mechanism):
+    a, lows, caps, oracle = gemm
+    plan = FaultPlan.parse([spec], snapshot_window=64)
+    gr = run_guarded(a.ppn, caps, plan, lows, oracle=oracle)
+    r = gr.resilience
+    assert r.injected, spec
+    assert r.status in ("recovered", "degraded"), (spec, r.summary())
+    assert mechanism in {d["mechanism"] for d in r.detections}
+    assert r.completed
+    assert r.outputs_match is True        # healed run == fault-free oracle
+    assert not r.undetected
+
+
+def test_hot_swap_degrades_fifo_to_reorder_buffer_end_to_end(gemm):
+    a, lows, caps, oracle = gemm
+    gr = run_guarded(a.ppn, caps,
+                     FaultPlan.single("reorder", "init->upd.C[0]", at=1),
+                     lows, oracle=oracle)
+    r = gr.resilience
+    assert r.status == "degraded" and r.outputs_match is True
+    (swap,) = r.swaps
+    assert swap["channel"] == "init->upd.C[0]"
+    assert swap["from"] == FIFO_STREAM
+    assert swap["to"] == degrade(FIFO_STREAM) == REORDER_BUFFER
+    # the slot cost of giving up the stream discipline is accounted
+    assert swap["stream_slots"] == caps["init->upd.C[0]"]
+    assert swap["addressable_slots"] >= 1
+
+
+def test_degradation_table_covers_every_stream_lowering():
+    for low, to in DEGRADED_LOWERING.items():
+        assert degrade(low) == to == REORDER_BUFFER
+    with pytest.raises(KeyError):
+        degrade(REORDER_BUFFER)           # nowhere further down to go
+
+
+def test_capacity_loss_spills_to_unbounded_with_accounting(gemm):
+    a, lows, caps, oracle = gemm
+    gr = run_guarded(a.ppn, caps,
+                     FaultPlan.single("capacity", "init->upd.C[0]", at=1,
+                                      arg=0),
+                     lows, oracle=oracle)
+    r = gr.resilience
+    assert r.completed and r.outputs_match is True
+    spill = next(s for s in r.spills if s["channel"] == "init->upd.C[0]")
+    assert spill["fault_induced"] is True
+    assert spill["capacity"] == 0
+    assert spill["planned"] == caps["init->upd.C[0]"]
+
+
+def test_undersized_snapshot_window_gives_up_loudly(gemm):
+    # bounded recovery is a hard budget: a drop outside the replay window
+    # must end as unrecovered WITH the culprit named — not silently wrong,
+    # not hanging
+    a, lows, caps, oracle = gemm
+    plan = FaultPlan(faults=(Fault("drop", "load_C->init.C[0]", at=1),),
+                     snapshot_window=1)
+    gr = run_guarded(a.ppn, caps, plan, lows, oracle=oracle)
+    r = gr.resilience
+    assert r.status == "unrecovered"
+    assert any(e["target"] == "load_C->init.C[0]" for e in r.unrecovered)
+    assert {d["target"] for d in r.detections} >= {"load_C->init.C[0]"}
+    assert r.outputs_match is False       # and the mismatch is visible
+
+
+def test_watchdog_budget_is_a_hard_bound():
+    wd = ProgressWatchdog(limit=3, max_restarts=1)
+    assert [wd.tick() for _ in range(4)] == [True, True, True, False]
+    assert wd.exhausted
+    assert wd.restart() is True and wd.restart() is False
+
+
+def test_detect_only_mode_reports_without_healing(gemm):
+    a, lows, caps, oracle = gemm
+    gr = run_guarded(a.ppn, caps,
+                     FaultPlan.single("corrupt", "init->upd.C[0]", at=1),
+                     lows, recover=False, oracle=oracle)
+    r = gr.resilience
+    assert any(d["mechanism"] == "checksum" for d in r.detections)
+    assert not r.recoveries
+    assert r.outputs_match is False       # corruption visibly propagates
+
+
+# ------------------------------------------- deterministic random property
+
+
+def _chain_ppn(n_procs: int, n: int, reverse_last: bool) -> PPN:
+    """A 2–3-process chain: src -> mid [-> sink], identity dataflow, with
+    the last hop optionally reversed (an out-of-order channel)."""
+    pts = np.arange(n, dtype=np.int64)[:, None]
+    sched = AffineSchedule(("i",), [v("i")])
+    names = ["src", "mid", "sink"][:n_procs]
+    procs = {nm: Process(nm, ("i",), sched, pts, stmt_rank=k)
+             for k, nm in enumerate(names)}
+    chans = []
+    for a, b in zip(names, names[1:]):
+        dst = pts[::-1].copy() if (reverse_last and b == names[-1]) else pts
+        chans.append(Channel(a, b, 0, "x", pts, dst))
+    return PPN(f"chain{n_procs}", {"N": n}, procs, chans)
+
+
+def _check_guarded(ppn, plan):
+    """The property: detect-or-recover, oracle-equal outputs on recovery,
+    named culprit otherwise — and the run always terminates."""
+    a = analyze(ppn).classify().size(pow2=True)
+    lows = channel_lowerings(a)
+    caps = executable_capacities(a)
+    oracle = run_guarded(ppn, caps, FaultPlan(), lows)
+    assert oracle.status == "clean" and oracle.run.completed
+    gr = run_guarded(ppn, caps, plan, lows, oracle=oracle)
+    r = gr.resilience
+    if not r.injected:        # trigger beyond the run's activity: a no-op
+        assert r.status == "clean"
+        return
+    assert not r.undetected, plan.faults[0].spec()
+    if r.status == "clean":
+        # a benign fault (reorder on an addressable buffer) — allowed
+        # only when the outputs prove it changed nothing
+        assert r.completed and r.outputs_match is True
+    elif r.status in ("recovered", "degraded"):
+        assert r.completed
+        assert r.outputs_match is True, plan.faults[0].spec()
+    else:
+        assert r.status == "unrecovered"
+        named = {e["target"] for e in r.unrecovered} | \
+                {d["target"] for d in r.detections}
+        assert plan.faults[0].target in named
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_random_single_faults_detect_or_recover(seed):
+    rng = np.random.RandomState(seed)
+    ppn = _chain_ppn(n_procs=int(rng.randint(2, 4)),
+                     n=int(rng.randint(3, 13)),
+                     reverse_last=bool(rng.randint(2)))
+    plan = FaultPlan.random(ppn, seed=seed)
+    _check_guarded(ppn, plan)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # pragma: no cover
+    pass
+else:
+    @settings(max_examples=60, deadline=None)
+    @given(n_procs=st.integers(2, 3), n=st.integers(3, 12),
+           reverse_last=st.booleans(), seed=st.integers(0, 10_000))
+    def test_hypothesis_random_faults_detect_or_recover(n_procs, n,
+                                                        reverse_last, seed):
+        ppn = _chain_ppn(n_procs, n, reverse_last)
+        _check_guarded(ppn, FaultPlan.random(ppn, seed=seed))
+
+
+# ------------------------------------------------- validate stage + schema
+
+
+def test_validate_mode_faults_produces_green_matrix(gemm):
+    a = _planned("gemm").validate(mode="faults")
+    assert a.resilience is not None
+    assert a.resilience.matrix and a.resilience.trace_matrix
+    assert all(row["detected"] for row in a.resilience.matrix)
+    assert all(row["detected"] for row in a.resilience.trace_matrix)
+    assert a.ctx.counters["faults_stages"] == 1
+    assert a.stages[-1] == "faults"
+
+
+def test_resilience_evidence_round_trips_through_report(gemm):
+    a = _planned("gemm").validate(mode="faults")
+    rep = a.report()
+    doc = rep.as_dict()
+    assert doc["schema_version"] == SCHEMA_VERSION == 4
+    assert doc["resilience"]["mode"] == "faults"
+    assert doc["resilience"]["counts"]["engine_cases"] > 0
+    back = AnalysisReport.from_dict(json.loads(rep.to_json()))
+    assert back.resilience == doc["resilience"]
+
+
+def test_unknown_validate_mode_still_fails_loudly():
+    with pytest.raises(ValueError, match="faults"):
+        _planned("gemm").validate(mode="nonsense")
+
+
+# ----------------------------------------------------------- CLI contract
+
+
+def test_cli_inject_exit_codes(capsys):
+    from repro.runtime.selftimed.__main__ import main
+    # recovered -> 0
+    assert main(["--kernel", "gemm", "--policy", "sequential",
+                 "--inject", "duplicate:init->upd.C[0]@1"]) == 0
+    assert "recovered" in capsys.readouterr().out
+    # degraded -> 0 plus a notice
+    assert main(["--kernel", "gemm", "--policy", "sequential",
+                 "--inject", "reorder:init->upd.C[0]@1"]) == 0
+    cap = capsys.readouterr()
+    assert "degraded" in cap.out and "notice" in cap.err
+    # bad spec -> 2
+    assert main(["--kernel", "gemm", "--inject", "bogus:x@1"]) == 2
+
+
+# ------------------------------------------------------ ft/ckpt satellites
+
+
+def test_preemption_guard_is_a_context_manager():
+    import signal
+    from repro.train.ft import PreemptionGuard
+    before = signal.getsignal(signal.SIGTERM)
+    with PreemptionGuard() as guard:
+        assert not guard.should_exit
+        guard._handler(signal.SIGTERM, None)
+        assert guard.should_exit
+    assert signal.getsignal(signal.SIGTERM) is before
+
+
+def test_retrying_backoff_is_bounded_and_capped():
+    from repro.train.ft import retrying
+    calls, waits, restores = [], [], []
+    def fn():
+        calls.append(1)
+        raise RuntimeError("flaky")
+    wrapped = retrying(fn, lambda: restores.append(1), max_retries=3,
+                       backoff=0.5, max_backoff=1.0, sleep=waits.append)
+    with pytest.raises(RuntimeError):
+        wrapped()
+    assert len(calls) == 4                # the cap is hard
+    assert len(restores) == 3
+    assert waits == [0.5, 1.0, 1.0]       # exponential, then clamped
+
+
+def test_checkpoint_sweeps_orphans_and_refuses_tmp_restore(tmp_path):
+    jax = pytest.importorskip("jax")
+    from repro.checkpoint.manager import CheckpointManager
+    orphan = tmp_path / "step_000000007.tmp"
+    orphan.mkdir()
+    (orphan / "meta.json").write_text("{}")
+    mgr = CheckpointManager(tmp_path)
+    assert mgr.swept == ["step_000000007.tmp"]
+    assert not orphan.exists()
+    # a fresh unpublished save must be refused, with a telling error
+    half = tmp_path / "step_000000009.tmp"
+    half.mkdir()
+    with pytest.raises(FileNotFoundError, match="never completed"):
+        mgr.restore(9, {"w": np.zeros(2)})
+    assert mgr.all_steps() == []          # .tmp is not a restorable step
