@@ -3,7 +3,7 @@ operational validation, with guards.
 
     PYTHONPATH=src python -m benchmarks.ci_smoke
 
-Eight sections, in order:
+Nine sections, in order:
 
 1. **Registry check** (`repro.lang.check_registry`, same gate as
    ``python -m repro.lang --check-registry``): every registered kernel spec
@@ -33,10 +33,14 @@ Eight sections, in order:
    on the same 3 kernels — every injected fault detected and recovered or
    loudly named, a guarded fault-free run stays clean — within
    ``FAULTS_BUDGET`` seconds.
-7. **Persistent store**: if ``REPRO_POLY_CACHE`` is set (CI wires it to an
+7. **Parametric smoke**: one symbolic-size template per smoke kernel
+   (``analyze(case, sizes=symbolic)``) must close without falling back and
+   instantiate byte-identically to a from-scratch concrete analysis at 2
+   sizes each, within ``PARAMETRIC_BUDGET`` seconds.
+8. **Persistent store**: if ``REPRO_POLY_CACHE`` is set (CI wires it to an
    `actions/cache` path), the verdict store is loaded here — warming the
    domain-enumeration boxes for the next section — and saved again at exit.
-8. **Table2 subset**: classifications must match the recorded
+9. **Table2 subset**: classifications must match the recorded
    BENCH_table2.json rows exactly and stay within GUARD_FACTOR of the
    recorded wall-clock.
 """
@@ -79,6 +83,13 @@ FAULTS_BUDGET = 60.0      # seconds for the fault matrix on the 3 smoke
                           # kernels: ~16 guarded engine runs + the trace
                           # replays each (measured ~5s) — recovery must be
                           # bounded, so a blown budget means a guard loop
+
+PARAMETRIC_BUDGET = 60.0  # seconds for the parametric section: one symbolic
+                          # template per smoke kernel (probe grids at the
+                          # small end of the lattice, measured ~3s total)
+                          # plus 2 concrete baselines each for the parity
+                          # check; the fallback path counts as a failure
+                          # here — these 3 kernels are known to close
 
 BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_table2.json"
 CACHE_ENV = "REPRO_POLY_CACHE"
@@ -267,6 +278,54 @@ def faults_smoke(failures: list) -> None:
                         f"budget — recovery is supposed to be bounded")
 
 
+def parametric_smoke(failures: list) -> None:
+    import warnings
+
+    from repro.core import symbolic
+    from repro.core.parametric import ParametricFallbackWarning
+
+    t0 = time.perf_counter()
+    evals = proved = flags = 0
+    for name in KERNELS:
+        case = get(name)
+        pa = (analyze(case, sizes=symbolic)
+              .classify().fifoize().size(pow2=True).plan())
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", ParametricFallbackWarning)
+            try:
+                pa.prepare()
+            except ParametricFallbackWarning as w:
+                failures.append(f"parametric/{name}: fell back ({w})")
+                continue
+        t = pa._template
+        doc = pa.report().parametric
+        for ch in doc["channels"].values():
+            for flag in ("in_order", "unicity"):
+                flags += 1
+                proved += ch[flag]["status"] in ("proved", "proved_ray")
+        for k in (0, 1):      # 2 sizes per kernel: θ and θ + stride
+            env = {p: t["theta"][p] + k * t["strides"][p]
+                   for p in pa.symbolic_params}
+            ev = report_payload(pa.evaluate(**env))
+            conc = report_payload(
+                analyze(case.kernel, params=dict(env), tilings=case.tilings)
+                .classify().fifoize().size(pow2=True).plan().report())
+            evals += 1
+            if json.dumps(ev, sort_keys=True) != json.dumps(conc,
+                                                            sort_keys=True):
+                failures.append(f"parametric/{name}: evaluate({env}) is not "
+                                f"byte-identical to concrete analysis")
+        pa.release()
+    dt = time.perf_counter() - t0
+    status = "ok" if dt <= PARAMETRIC_BUDGET else "SLOW"
+    print(f"parametric smoke  {len(KERNELS)} templates, {evals} sizes "
+          f"byte-checked, {proved}/{flags} flags proved  {dt*1e3:7.1f}ms "
+          f"(budget {PARAMETRIC_BUDGET*1e3:.0f}ms) {status}")
+    if dt > PARAMETRIC_BUDGET:
+        failures.append(f"parametric: {dt:.1f}s exceeds the "
+                        f"{PARAMETRIC_BUDGET}s budget")
+
+
 def table2_smoke(failures: list) -> None:
     doc = json.loads(BENCH_PATH.read_text())
     recorded = {r["kernel"]: r for r in doc["optimized"]}
@@ -306,14 +365,17 @@ def main() -> int:
         selftimed_smoke(failures)
         # 6. fault matrix: injected faults detected, recovered or named
         faults_smoke(failures)
-        # 7. warm start for the remaining sections, refreshed on the way out
+        # 7. symbolic templates instantiate byte-identically to concrete
+        #    analysis on 3 kernels x 2 sizes
+        parametric_smoke(failures)
+        # 8. warm start for the remaining sections, refreshed on the way out
         cache_path = os.environ.get(CACHE_ENV)
         if cache_path:
             clear_polyhedron_cache()
             print(f"persistent store: loaded "
                   f"{load_polyhedron_cache(cache_path)} entries "
                   f"from {cache_path}")
-        # 8. table2 classification + timing guard
+        # 9. table2 classification + timing guard
         table2_smoke(failures)
         if cache_path and not failures:
             print(f"persistent store: saved "

@@ -17,13 +17,15 @@ from .analysis import (SCHEMA_VERSION, Analysis, AnalysisContext,
                        AnalysisReport, ChannelPlan, analyze)
 from .dataflow import Access, DepEdges, Kernel, Statement, direct_dependences
 from .deprecation import reset_deprecation_warnings
+from .parametric import (ParametricAnalysis, ParametricFallbackWarning,
+                         SizePoly, symbolic)
 from .patterns import (ChannelClassifier, Pattern, ProcSpace, classify_channel,
                        classify_channels, classify_edges, classify_symbolic,
                        in_order_symbolic, unicity_symbolic)
-from .polyhedron import (Polyhedron, clear_polyhedron_cache,
+from .polyhedron import (FMBlowup, Polyhedron, clear_polyhedron_cache,
                          export_polyhedron_cache, load_polyhedron_cache,
-                         merge_polyhedron_cache, polyhedron_cache_stats,
-                         save_polyhedron_cache)
+                         merge_polyhedron_cache, polyhedron_cache_pin,
+                         polyhedron_cache_stats, save_polyhedron_cache)
 from .ppn import PPN, Channel, DomainIndex, Process
 from .registry import resolve_case
 from .relation import Relation
@@ -40,20 +42,23 @@ from .tiling import (Tiling, rectangular, rescale_tilings, unit_tilings)
 __all__ = [
     "Access", "AffineSchedule", "Analysis", "AnalysisContext",
     "AnalysisReport", "Channel", "ChannelClassifier", "ChannelPlan",
-    "Constraint", "DepEdges", "DomainIndex", "FifoizeReport", "Kernel",
-    "LinExpr", "NotApplicable", "PPN", "Pattern", "Polyhedron", "ProcSpace",
-    "Process", "Relation", "SCHEMA_VERSION", "SizingContext", "Statement",
+    "Constraint", "DepEdges", "DomainIndex", "FMBlowup", "FifoizeReport",
+    "Kernel", "LinExpr", "NotApplicable", "PPN", "ParametricAnalysis",
+    "ParametricFallbackWarning", "Pattern", "Polyhedron", "ProcSpace",
+    "Process", "Relation", "SCHEMA_VERSION", "SizePoly", "SizingContext",
+    "Statement",
     "Tiling", "analyze", "SweepJob", "PROLOGUE_C0", "boundary_schedule",
     "ceil_div", "channel_capacity", "classify_channel",
     "classify_channels", "classify_edges", "classify_symbolic",
     "clear_polyhedron_cache", "direct_dependences", "eq",
     "export_polyhedron_cache", "fifoize", "fifoize_relation", "floor_div",
     "ge", "gt", "in_order_symbolic", "le", "load_polyhedron_cache", "lt",
-    "epilogue_c0", "merge_polyhedron_cache", "polyhedron_cache_stats",
+    "epilogue_c0", "merge_polyhedron_cache", "polyhedron_cache_pin",
+    "polyhedron_cache_stats",
     "pow2_size", "rectangular", "report_payload", "rescale_tilings",
     "resolve_case",
     "reset_deprecation_warnings", "run_job", "save_polyhedron_cache",
     "size_channels", "split_by_tile_pair", "split_channel", "split_covers",
-    "split_relation", "sweep", "sweep_parallel", "tick_capacity",
-    "unicity_symbolic", "unit_tilings", "v",
+    "split_relation", "sweep", "sweep_parallel", "symbolic",
+    "tick_capacity", "unicity_symbolic", "unit_tilings", "v",
 ]

@@ -50,6 +50,10 @@ class AnalysisContext:
     def __init__(self) -> None:
         self._classifier: Optional[ChannelClassifier] = None
         self._sizing: Optional[SizingContext] = None
+        # when the parametric engine probes a concrete size it sets this to a
+        # dict; the size/plan stages then record raw (pre-pow2) capacities
+        # under "size_raw" / "plan_raw" without changing their outputs
+        self.capture: Optional[Dict[str, Any]] = None
         self.counters: Dict[str, int] = {
             "classifier_builds": 0, "sizing_builds": 0,
             "classify_stages": 0, "fifoize_stages": 0,
@@ -112,8 +116,11 @@ class ChannelPlan:
 #: detect drift instead of mis-parsing.  v1 was the unversioned PR-2 format;
 #: v2 added ``schema_version``, ``validation`` and per-plan ``topology``;
 #: v3 added ``selftimed`` (the self-timed execution evidence);
-#: v4 added ``resilience`` (the fault-matrix evidence).
-SCHEMA_VERSION = 4
+#: v4 added ``resilience`` (the fault-matrix evidence);
+#: v5 added ``parametric`` (symbolic verdicts + closed-form sizes; None on
+#: concrete runs, so evaluated parametric reports stay byte-identical to
+#: concrete analysis).
+SCHEMA_VERSION = 5
 
 
 @dataclass
@@ -132,6 +139,7 @@ class AnalysisReport:
     validation: Optional[Dict[str, Any]] = None   # validate-stage evidence
     selftimed: Optional[Dict[str, Any]] = None    # self-timed execution
     resilience: Optional[Dict[str, Any]] = None   # fault-matrix evidence
+    parametric: Optional[Dict[str, Any]] = None   # symbolic verdicts/sizes
     schema_version: int = SCHEMA_VERSION
 
     def as_dict(self) -> Dict[str, Any]:
@@ -144,6 +152,7 @@ class AnalysisReport:
             "validation": self.validation,
             "selftimed": self.selftimed,
             "resilience": self.resilience,
+            "parametric": self.parametric,
             "cache": self.cache,
         }
 
@@ -163,7 +172,7 @@ class AnalysisReport:
         return cls(**{f: doc[f] for f in (
             "kernel", "params", "stages", "channels", "fifoize", "sizes_pow2",
             "total_slots", "plans", "validation", "selftimed", "resilience",
-            "cache", "schema_version")})
+            "parametric", "cache", "schema_version")})
 
     @classmethod
     def from_json(cls, text: str) -> "AnalysisReport":
@@ -259,8 +268,11 @@ class Analysis:
         """Channel capacities under the tiled sequential schedule (paper §4),
         on the shared per-process global-timestamp caches."""
         self.ctx.counters["size_stages"] += 1
+        capture = (None if self.ctx.capture is None
+                   else self.ctx.capture.setdefault("size_raw", {}))
         sizes = _size_channels(self.ppn, pow2=pow2,
-                               context=self.ctx.sizing(self.ppn))
+                               context=self.ctx.sizing(self.ppn),
+                               capture=capture)
         return self._next("size", sizes=sizes, sizes_pow2=pow2)
 
     def plan(self, topology: str = "sequential") -> "Analysis":
@@ -291,9 +303,19 @@ class Analysis:
         # the verdict→lowering mapping is the runtime registry's single
         # table; nothing here may hard-code a lowering name
         from ..runtime.lowering import lowering_for_pattern, split_lowering
+        capture = self.ctx.capture
+
+        def record(parts_raw: List[Tuple[int, int]]) -> None:
+            # raw caps of the CHOSEN parts only (discarded split attempts
+            # must not pollute the parametric fit samples)
+            if capture is not None:
+                capture.setdefault("plan_raw", {})[ch.name] = parts_raw
+
         before = clf.classify(ch)
         if before is Pattern.FIFO:
-            slots = pow2_size(cap(ch))
+            raw = cap(ch)
+            slots = pow2_size(raw)
+            record([(0, raw)])
             return ChannelPlan(ch.name, before.value, False,
                                [(0, before.value, slots)],
                                lowering_for_pattern(before), slots, topology)
@@ -305,15 +327,20 @@ class Analysis:
                 parts = splitter(self.ppn, ch)
             except NotApplicable:
                 continue
-            classified = [(p.depth, clf.classify(p), pow2_size(cap(p)))
+            classified = [(p.depth, clf.classify(p), cap(p))
                           for p in parts]
             if all(pat is Pattern.FIFO for _, pat, _ in classified):
+                record([(d, raw) for d, _, raw in classified])
                 return ChannelPlan(
                     ch.name, before.value, True,
-                    [(d, pat.value, sz) for d, pat, sz in classified],
+                    [(d, pat.value, pow2_size(raw))
+                     for d, pat, raw in classified],
                     split_lowering(label),
-                    sum(sz for _, _, sz in classified), topology)
-        slots = pow2_size(cap(ch))
+                    sum(pow2_size(raw) for _, _, raw in classified),
+                    topology)
+        raw = cap(ch)
+        slots = pow2_size(raw)
+        record([(0, raw)])
         return ChannelPlan(ch.name, before.value, False,
                            [(0, before.value, slots)],
                            lowering_for_pattern(before), slots, topology)
@@ -448,7 +475,8 @@ class Analysis:
 
 def analyze(kernel: Union[Kernel, PPN, Any],
             params: Optional[Mapping[str, int]] = None,
-            tilings: Optional[Mapping[str, Tiling]] = None) -> Analysis:
+            tilings: Optional[Mapping[str, Tiling]] = None,
+            sizes: Optional[Any] = None):
     """Entry point of the staged pipeline.
 
     Accepts a `Kernel` (the dataflow oracle runs once, here), an
@@ -457,7 +485,25 @@ def analyze(kernel: Union[Kernel, PPN, Any],
     builder program implementing `__kernelcase__()` (a `repro.lang.Nest` —
     compiled and validated here, so malformed specs fail with diagnostics
     before any analysis runs).
-    """
+
+    ``sizes=symbolic`` (the sentinel from `repro.core.parametric`) switches
+    to the parametric pipeline: the kernel's declared size parameters stay
+    symbolic and the returned `ParametricAnalysis` proves/fits the whole
+    report once, after which ``.evaluate(N=..., T=...)`` instantiates it for
+    any concrete size in microseconds (byte-identical to a concrete run).
+    A mapping ``sizes={"N": 32}`` is shorthand for concrete ``params``
+    overrides."""
+    if sizes is not None:
+        from .parametric import ParametricAnalysis, symbolic
+        if isinstance(sizes, Mapping):
+            return analyze(kernel, params=dict(params or {}, **sizes),
+                           tilings=tilings)
+        if sizes is not symbolic and sizes != "symbolic":
+            raise ValueError(
+                f"sizes must be the `symbolic` sentinel (or a concrete "
+                f"mapping), got {sizes!r}")
+        return ParametricAnalysis.start(kernel, params=params,
+                                        tilings=tilings)
     if hasattr(kernel, "__kernelcase__"):
         kernel = kernel.__kernelcase__()
     if isinstance(kernel, PPN):

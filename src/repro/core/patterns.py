@@ -295,6 +295,32 @@ def _violations_empty(rel: Relation, prod: ProcSpace, cons_: ProcSpace,
     return True
 
 
+def violation_systems(rel: Relation, prod: ProcSpace, cons_: ProcSpace,
+                      assumptions: Iterable[Constraint], kind: str):
+    """Yield every fully-extended violation system as one `Polyhedron`.
+
+    These are exactly the systems `_violations_empty` decides incrementally
+    at a concrete size; the parametric prover materialises each whole and
+    projects it onto the size parameters instead (`core.parametric`), so the
+    construction lives here next to the incremental path it mirrors.
+    """
+    (assumptions, p1, p2, a_vars, c_vars,
+     ts_a, ts_b, ts_c, ts_d, aux) = _violation_setup(rel, prod, cons_,
+                                                     assumptions)
+    uniq = [eq(LinExpr.var(u), LinExpr.var(w))
+            for u, w in zip(a_vars, c_vars)]
+    for poly1 in p1:
+        for poly2 in p2:
+            base = poly1.intersect(poly2).intersect(assumptions).intersect(aux)
+            for k1 in range(1, len(ts_b) + 1):
+                lhs = base.intersect(lex_lt_at_depth(ts_b, ts_d, k1))
+                if kind == "in-order":
+                    for k2 in range(1, len(ts_a) + 1):
+                        yield lhs.intersect(lex_lt_at_depth(ts_c, ts_a, k2))
+                else:
+                    yield lhs.intersect(uniq)
+
+
 def in_order_symbolic(rel: Relation, prod: ProcSpace, cons_: ProcSpace,
                       assumptions: Iterable[Constraint] = ()) -> bool:
     return _violations_empty(rel, prod, cons_, assumptions, "in-order")

@@ -16,9 +16,14 @@ kernel's dependences).  Statements living in a sub-band of the tiled nest
 embed into the common tile space with degenerate normals (constant tile
 coordinates) so FIFOIZE can compare tile depths across producer/consumer.
 
-Structure parameters are concrete (the enumeration backend is exact for
-fixed sizes, like the paper's tool which sizes channels for fixed PolyBench
-sizes); the ``scale`` argument lets tests re-run everything at other sizes.
+Structure parameters are *symbolic with concrete defaults*: every kernel
+declares its sizes with ``Nest.param`` (``N = k.param("N", 12 * scale)``),
+so the concrete pipeline behaves exactly as before (defaults baked into
+``Kernel.params``; the enumeration backend is exact for fixed sizes, like
+the paper's tool which sizes channels for fixed PolyBench sizes), while
+``analyze(case, sizes=symbolic)`` analyses the same spec once for all
+sizes.  The ``scale`` argument scales the defaults; ``analyze(...,
+params={"N": n})`` overrides them per run.
 
 The registry here is the frontend-agnostic `core.registry`; the old raw
 authoring helpers (``sched``/``rng``/``load``/``store``) remain as
@@ -115,8 +120,8 @@ def _rect(dims: Sequence[str], tiled: Sequence[str], b: int) -> Tiling:
 
 @register("gemm")
 def gemm(scale: int = 1) -> Nest:
-    N, b = 12 * scale, 4
     k = Nest("gemm")
+    N, b = k.param("N", 12 * scale), 4
     C, A, B = k.array("C", N, N), k.array("A", N, N), k.array("B", N, N)
     k.inputs(C, A, B)
     k.outputs(C)
@@ -132,8 +137,8 @@ def gemm(scale: int = 1) -> Nest:
 
 @register("trmm")
 def trmm(scale: int = 1) -> Nest:
-    N, b = 12 * scale, 4
     k = Nest("trmm")
+    N, b = k.param("N", 12 * scale), 4
     A, B = k.array("A", N, N), k.array("B", N, N)
     k.inputs(A, B)
     k.outputs(B)
@@ -147,8 +152,8 @@ def trmm(scale: int = 1) -> Nest:
 
 @register("syrk")
 def syrk(scale: int = 1) -> Nest:
-    N, b = 12 * scale, 4
     k = Nest("syrk")
+    N, b = k.param("N", 12 * scale), 4
     C, A = k.array("C", N, N), k.array("A", N, N)
     k.inputs(C, A)
     k.outputs(C)
@@ -164,8 +169,8 @@ def syrk(scale: int = 1) -> Nest:
 
 @register("syr2k")
 def syr2k(scale: int = 1) -> Nest:
-    N, b = 12 * scale, 4
     k = Nest("syr2k")
+    N, b = k.param("N", 12 * scale), 4
     C, A, B = k.array("C", N, N), k.array("A", N, N), k.array("B", N, N)
     k.inputs(C, A, B)
     k.outputs(C)
@@ -181,8 +186,8 @@ def syr2k(scale: int = 1) -> Nest:
 
 @register("symm")
 def symm(scale: int = 1) -> Nest:
-    N, b = 12 * scale, 4
     k = Nest("symm")
+    N, b = k.param("N", 12 * scale), 4
     C, A, B = k.array("C", N, N), k.array("A", N, N), k.array("B", N, N)
     acc = k.array("acc", N, N)
     k.inputs(C, A, B)
@@ -205,8 +210,8 @@ def symm(scale: int = 1) -> Nest:
 
 @register("gemver")
 def gemver(scale: int = 1) -> Nest:
-    N, b = 12 * scale, 4
     k = Nest("gemver")
+    N, b = k.param("N", 12 * scale), 4
     A = k.array("A", N, N)
     u1, v1, u2, v2 = (k.array(n, N) for n in ("u1", "v1", "u2", "v2"))
     x, y, z, w = (k.array(n, N) for n in ("x", "y", "z", "w"))
@@ -230,8 +235,8 @@ def gemver(scale: int = 1) -> Nest:
 
 @register("gesummv")
 def gesummv(scale: int = 1) -> Nest:
-    N, b = 12 * scale, 4
     k = Nest("gesummv")
+    N, b = k.param("N", 12 * scale), 4
     A, B = k.array("A", N, N), k.array("B", N, N)
     x, y, tmp = k.array("x", N), k.array("y", N), k.array("tmp", N)
     k.inputs(A, B, x)
@@ -253,8 +258,8 @@ def gesummv(scale: int = 1) -> Nest:
 
 @register("lu")
 def lu(scale: int = 1) -> Nest:
-    N, b = 12 * scale, 4
     k = Nest("lu")
+    N, b = k.param("N", 12 * scale), 4
     A = k.array("A", N, N)
     k.inputs(A)
     k.outputs(A)
@@ -272,8 +277,8 @@ def lu(scale: int = 1) -> Nest:
 
 @register("cholesky")
 def cholesky(scale: int = 1) -> Nest:
-    N, b = 12 * scale, 4
     k = Nest("cholesky")
+    N, b = k.param("N", 12 * scale), 4
     A, L, y = k.array("A", N, N), k.array("L", N, N), k.array("y", N, N)
     x, p = k.array("x", N), k.array("p", N)
     k.inputs(A)
@@ -300,8 +305,8 @@ def cholesky(scale: int = 1) -> Nest:
 
 @register("atax")
 def atax(scale: int = 1) -> Nest:
-    N, b = 12 * scale, 4
     k = Nest("atax")
+    N, b = k.param("N", 12 * scale), 4
     A, x, y, tmp = (k.array("A", N, N), k.array("x", N), k.array("y", N),
                     k.array("tmp", N))
     k.inputs(A, x)
@@ -323,8 +328,8 @@ def atax(scale: int = 1) -> Nest:
 
 @register("doitgen")
 def doitgen(scale: int = 1) -> Nest:
-    N, b = 8 * scale, 4
     k = Nest("doitgen")
+    N, b = k.param("N", 8 * scale), 4
     A, C4 = k.array("A", N, N, N), k.array("C4", N, N)
     acc = k.array("sum", N, N, N)
     k.inputs(A, C4)
@@ -347,8 +352,8 @@ def doitgen(scale: int = 1) -> Nest:
 
 @register("jacobi-1d")
 def jacobi_1d(scale: int = 1) -> Nest:
-    N, T, b = 16 * scale, 8 * scale, 4
     k = Nest("jacobi-1d")
+    N, T, b = k.param("N", 16 * scale), k.param("T", 8 * scale), 4
     A, B = k.array("A", N), k.array("B", N)
     k.inputs(A)
     k.outputs(A)
@@ -366,8 +371,8 @@ def jacobi_1d(scale: int = 1) -> Nest:
 
 @register("jacobi-2d")
 def jacobi_2d(scale: int = 1) -> Nest:
-    N, T, b = 10 * scale, 4 * scale, 4
     k = Nest("jacobi-2d")
+    N, T, b = k.param("N", 10 * scale), k.param("T", 4 * scale), 4
     A, B = k.array("A", N, N), k.array("B", N, N)
     k.inputs(A)
     k.outputs(A)
@@ -387,8 +392,8 @@ def jacobi_2d(scale: int = 1) -> Nest:
 
 @register("seidel-2d")
 def seidel_2d(scale: int = 1) -> Nest:
-    N, T, b = 10 * scale, 4 * scale, 4
     k = Nest("seidel-2d")
+    N, T, b = k.param("N", 10 * scale), k.param("T", 4 * scale), 4
     A = k.array("A", N, N)
     k.inputs(A)
     k.outputs(A)
@@ -404,8 +409,8 @@ def seidel_2d(scale: int = 1) -> Nest:
 
 @register("heat-3d")
 def heat_3d(scale: int = 1) -> Nest:
-    N, T, b = 8 * scale, 4 * scale, 4
     k = Nest("heat-3d")
+    N, T, b = k.param("N", 8 * scale), k.param("T", 4 * scale), 4
     A, B = k.array("A", N, N, N), k.array("B", N, N, N)
     k.inputs(A)
     k.outputs(A)
@@ -441,13 +446,14 @@ def jacobi_1d_paper(N: int = 16, T: int = 8, b1: int = 4, b2: int = 4) -> Kernel
     (a[t][i] form, load/compute/store processes, tiling hyperplanes t and
     t+i).  Channels 1-3: load→compute, 4-6: compute→compute, 7: →store."""
     k = Nest("jacobi-1d-paper")
-    a = k.array("a", T + 1, N + 2)
-    with k.loop("i", 0, N + 2) as i:
+    n, tt = k.param("N", N), k.param("T", T)
+    a = k.array("a", tt + 1, n + 2)
+    with k.loop("i", 0, n + 2) as i:
         k.stmt("load", writes=[a[0, i]])
-    with k.loop("t", 1, T + 1) as t, k.loop("i", 1, N + 1) as i:
+    with k.loop("t", 1, tt + 1) as t, k.loop("i", 1, n + 1) as i:
         k.stmt("compute", writes=[a[t, i]],
                reads=[a[t - 1, i - 1], a[t - 1, i], a[t - 1, i + 1]])
-    with k.loop("i", 1, N + 1) as i:
-        k.stmt("store", reads=[a[T, i]])
+    with k.loop("i", 1, n + 1) as i:
+        k.stmt("store", reads=[a[tt, i]])
     k.tile("compute", Tiling(((1, 0), (1, 1)), (b1, b2)))
     return k.case(compute=("compute",))

@@ -28,6 +28,7 @@ import math
 import os
 import pickle
 import tempfile
+import weakref
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
@@ -36,6 +37,11 @@ from .affine import Constraint, LinExpr, ceil_div, floor_div
 
 # A row is an inequality  sum(coeffs[v]*v) + const >= 0, stored as LinExpr.
 Row = LinExpr
+
+
+class FMBlowup(Exception):
+    """Fourier–Motzkin row blow-up guard tripped; the (parametric) projection
+    was abandoned rather than computed approximately."""
 
 # int64 combination safety margin: |a*b + c*d| must stay below 2^63.
 _INT64_SAFE = 1 << 62
@@ -60,12 +66,67 @@ _INT64_SAFE = 1 << 62
 _EMPTY_MEMO: Dict[object, bool] = {}
 _POINT_MEMO: Dict[object, Optional[Dict[str, int]]] = {}
 _BOX_MEMO: Dict[object, Dict[str, Tuple[int, int]]] = {}
+_PROJ_MEMO: Dict[object, object] = {}
 _EMPTY_STRUCT: Dict[object, List[Tuple[Tuple[int, ...], bool]]] = {}
 _POINT_STRUCT: Dict[object, List[Tuple[Tuple[int, ...], Dict[str, int]]]] = {}
 _MEMO_LIMIT = 1 << 17
 _STRUCT_FANOUT = 16        # monotone entries kept/scanned per structure node
 _MEMO_STATS = {"hits": 0, "misses": 0, "evictions": 0, "struct_hits": 0,
                "loaded": 0}
+
+
+# ----------------------------------------------------------------- pinning ---
+# A live symbolic (parametric) analysis keeps its template valid by replaying
+# cached verdicts at evaluate() time, possibly long after the sweep that
+# produced them.  A CachePin records every memo key touched while it is
+# entered (as a context manager) and, for as long as the pin object is alive,
+# the bounded half-eviction in `_memo_put` skips those keys.  Pins are held in
+# a WeakSet so a dropped analysis releases its pins automatically.
+
+_LIVE_PINS: "weakref.WeakSet[CachePin]" = weakref.WeakSet()
+_RECORDING: List["CachePin"] = []
+
+
+class CachePin:
+    """Pins polyhedron-memo entries against eviction while alive.
+
+    Use as a context manager around the queries whose verdicts must survive
+    (``with pin: ...``); every key read or written inside is pinned until
+    `release()` is called or the pin is garbage collected.
+    """
+
+    __slots__ = ("keys", "__weakref__")
+
+    def __init__(self) -> None:
+        self.keys: set = set()
+
+    def __enter__(self) -> "CachePin":
+        _RECORDING.append(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        try:
+            _RECORDING.remove(self)
+        except ValueError:
+            pass
+
+    def release(self) -> None:
+        self.keys.clear()
+        _LIVE_PINS.discard(self)
+
+
+def polyhedron_cache_pin() -> CachePin:
+    """A new live pin; see `CachePin`."""
+    pin = CachePin()
+    _LIVE_PINS.add(pin)
+    return pin
+
+
+def _pinned_keys() -> set:
+    pinned: set = set()
+    for pin in _LIVE_PINS:
+        pinned |= pin.keys
+    return pinned
 
 #: bump when the key or value layout of the persistent store changes; files
 #: with another version are silently ignored (the cache is safe to delete).
@@ -76,6 +137,7 @@ def clear_polyhedron_cache() -> None:
     _EMPTY_MEMO.clear()
     _POINT_MEMO.clear()
     _BOX_MEMO.clear()
+    _PROJ_MEMO.clear()
     _EMPTY_STRUCT.clear()
     _POINT_STRUCT.clear()
     for k in _MEMO_STATS:
@@ -86,27 +148,45 @@ def polyhedron_cache_stats() -> Dict[str, int]:
     return dict(_MEMO_STATS,
                 empty_entries=len(_EMPTY_MEMO),
                 point_entries=len(_POINT_MEMO),
-                box_entries=len(_BOX_MEMO))
+                box_entries=len(_BOX_MEMO),
+                proj_entries=len(_PROJ_MEMO),
+                pinned_keys=sum(len(p.keys) for p in _LIVE_PINS))
 
 
 def _memo_get(memo: Dict, key):
     got = memo.get(key, _memo_get)
     if got is not _memo_get:
         _MEMO_STATS["hits"] += 1
+        if _RECORDING:
+            for pin in _RECORDING:
+                pin.keys.add(key)
         return True, got
     _MEMO_STATS["misses"] += 1
     return False, None
 
 
 def _memo_put(memo: Dict, key, value, struct: Optional[Dict] = None):
+    if _RECORDING:
+        for pin in _RECORDING:
+            pin.keys.add(key)
     if len(memo) >= _MEMO_LIMIT:
         # bounded eviction: drop the oldest half (dict preserves insertion
         # order) instead of wiping the whole cache — the retained half keeps
-        # long-running sweeps warm across the limit.
+        # long-running sweeps warm across the limit.  Keys pinned by a live
+        # symbolic analysis are skipped so its template verdicts stay warm;
+        # if everything in the oldest half is pinned the memo simply grows
+        # past the limit until the pins are released.
         drop = max(1, len(memo) // 2)
-        for k in list(itertools.islice(iter(memo), drop)):
+        pinned = _pinned_keys() if _LIVE_PINS else ()
+        dropped = 0
+        for k in list(iter(memo)):
+            if dropped >= drop:
+                break
+            if k in pinned:
+                continue
             del memo[k]
-        _MEMO_STATS["evictions"] += drop
+            dropped += 1
+        _MEMO_STATS["evictions"] += dropped
         if struct is not None:
             struct.clear()      # lossy side index; rebuild from later queries
     memo[key] = value
@@ -463,6 +543,60 @@ class Polyhedron:
         keep = [v for v in names if v not in drop]
         keep_cols = [col_of[v] for v in keep] + [len(names)]
         return Polyhedron.from_matrix(keep, mat[:, keep_cols])
+
+    def project_onto(self, keep: Sequence[str],
+                     max_rows: int = 4000) -> Optional["Polyhedron"]:
+        """Parametric projection: FM-eliminate every variable *not* in
+        ``keep``, leaving a system over the kept columns only.
+
+        This is the parametric-polyhedron entry point: when ``keep`` is the
+        set of symbolic size parameters, the parameters ride through the
+        elimination as ordinary columns and the result characterises exactly
+        the parameter values for which the original system is rationally
+        non-empty (FM is complete over Q).
+
+        Returns None when the system is empty for *all* parameter values.
+        Raises `FMBlowup` when the row count exceeds ``max_rows`` mid-way —
+        callers must treat that as "undecided", never as a verdict.
+
+        Memoized with the same two-level ``(structure × constants)`` key as
+        the emptiness caches, extended with the kept-variable set.
+        """
+        cvars, mat = self._canonical()
+        if mat is None:
+            return None
+        keep_set = frozenset(keep)
+        skey, consts = Polyhedron._memo_key(cvars, mat)
+        key = ((skey, tuple(sorted(keep_set))), consts)
+        hit, cached = _memo_get(_PROJ_MEMO, key)
+        if hit:
+            if cached is None:
+                return None
+            kept, pmat = cached
+            return Polyhedron.from_matrix(kept, pmat)
+        col_of = {v: j for j, v in enumerate(cvars)}
+        elim = [j for v, j in col_of.items() if v not in keep_set]
+        work = mat
+        while True:
+            if work.shape[0] == 0:
+                break
+            occ = (work[:, :-1] != 0).sum(axis=0)
+            cand = [j for j in elim if occ[j] > 0]
+            if not cand:
+                break
+            j = min(cand, key=lambda j: int(occ[j]))
+            work = _fm_eliminate_matrix(work, j)
+            if work is None:
+                _memo_put(_PROJ_MEMO, key, None)
+                return None
+            if work.shape[0] > max_rows:
+                raise FMBlowup(
+                    f"parametric projection exceeded {max_rows} rows")
+        kept = tuple(v for v in cvars if v in keep_set)
+        cols = [col_of[v] for v in kept] + [len(cvars)]
+        pmat = work[:, cols]
+        _memo_put(_PROJ_MEMO, key, (kept, pmat))
+        return Polyhedron.from_matrix(kept, pmat)
 
     def is_rationally_empty(self) -> bool:
         """Exact emptiness over Q (FM is complete over the rationals)."""

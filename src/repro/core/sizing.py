@@ -257,11 +257,16 @@ def pow2_size(capacity: int) -> int:
 
 
 def _size_channels(ppn: PPN, pow2: bool = False,
-                   context: Optional[SizingContext] = None) -> Dict[str, int]:
+                   context: Optional[SizingContext] = None,
+                   capture: Optional[Dict[str, int]] = None) -> Dict[str, int]:
     ctx = context if context is not None else SizingContext(ppn)
     out: Dict[str, int] = {}
     for c in ppn.channels:
         cap = _channel_capacity(ppn, c, context=ctx)
+        if capture is not None:
+            # raw (pre-pow2) capacities for the parametric engine: closed
+            # forms are fitted on these, rounding is re-applied at evaluate()
+            capture[c.name] = cap
         out[c.name] = pow2_size(cap) if pow2 else cap
     return out
 

@@ -69,10 +69,22 @@ def _run_stages(a: Analysis, stages: Sequence[str], pow2: bool,
     return a
 
 
+def _size_grid(sizes: Mapping[str, Any]) -> List[Dict[str, int]]:
+    """A ``sizes`` mapping (param → value or list of values) as the list of
+    concrete size points, in Cartesian-product order with the last parameter
+    varying fastest."""
+    import itertools
+    axes = [(p, list(vals) if isinstance(vals, (list, tuple, range))
+             else [vals]) for p, vals in sizes.items()]
+    return [dict(zip((p for p, _ in axes), pt))
+            for pt in itertools.product(*(vals for _, vals in axes))]
+
+
 def sweep(kernel: Union[Kernel, PPN, Any],
           tilings: Sequence[Mapping[str, Tiling]],
           params: Optional[Mapping[str, int]] = None,
           *,
+          sizes: Optional[Mapping[str, Any]] = None,
           stages: Sequence[str] = DEFAULT_STAGES,
           pow2: bool = True,
           topology: str = "sequential") -> List[AnalysisReport]:
@@ -85,13 +97,34 @@ def sweep(kernel: Union[Kernel, PPN, Any],
     exactly like `PPN.from_kernel`; unmapped processes are untiled.  Returns
     one `AnalysisReport` per configuration, in order, each identical to a
     fresh ``analyze(kernel, tilings=cfg)`` running the same stages.
+
+    ``sizes`` adds a second sweep axis over concrete size points (param →
+    list of values, expanded as a Cartesian grid).  The kernel is analyzed
+    **symbolically once per tiling configuration** (`ParametricAnalysis`)
+    and instantiated per size point — reports come back cfg-major
+    (all size points of configuration 0, then configuration 1, …), each
+    identical to a fresh concrete ``analyze(kernel, params=pt,
+    tilings=cfg)``.  Size points off a template's proved lattice fall back
+    to concrete analysis with a `ParametricFallbackWarning`.
     """
     if hasattr(kernel, "__kernelcase__"):
         kernel = kernel.__kernelcase__()    # lang program → compiled case
     if hasattr(kernel, "kernel") and hasattr(kernel, "tilings"):
         kernel = kernel.kernel          # a KernelCase; sweep supplies tilings
-    base = analyze(kernel, params=params)      # dataflow oracle runs ONCE
     reports: List[AnalysisReport] = []
+    if sizes is not None:
+        from .parametric import ParametricAnalysis
+        grid = _size_grid(sizes)
+        for cfg in tilings:
+            pa = _run_stages(
+                ParametricAnalysis.start(kernel, params=params,
+                                         tilings=cfg),
+                stages, pow2, topology)
+            for pt in grid:
+                reports.append(pa.evaluate(**pt))
+            pa.release()
+        return reports
+    base = analyze(kernel, params=params)      # dataflow oracle runs ONCE
     for cfg in tilings:
         a = _run_stages(base.retile(cfg), stages, pow2, topology)
         reports.append(a.report())

@@ -172,7 +172,7 @@ class ArrayRef:
     the declared shape is also the domain of the derived boundary process."""
 
     name: str
-    shape: Tuple[int, ...]
+    shape: Tuple[object, ...]      # int extents, or LinExpr over parameters
 
     def __getitem__(self, idx) -> "AccessRef":
         return AccessRef(self, idx if isinstance(idx, tuple) else (idx,))
@@ -235,6 +235,7 @@ class Nest:
 
     def __init__(self, name: str):
         self.name = name
+        self._params: Dict[str, int] = {}
         self._arrays: Dict[str, ArrayRef] = {}
         self._stack: List[_OpenLoop] = []
         self._all_loops: List[_OpenLoop] = []
@@ -248,11 +249,54 @@ class Nest:
 
     # ------------------------------------------------------------ authoring
 
-    def array(self, name: str, *shape: int) -> ArrayRef:
-        """Declare an array with its extents (each dimension ``[0, ext)``)."""
+    def param(self, name: str, default: int) -> AffExpr:
+        """Declare a symbolic size parameter with its concrete default.
+
+        The returned expression composes into loop bounds, array extents and
+        where-clauses like any iterator.  The default is baked into the
+        compiled ``Kernel.params`` so every concrete path (enumeration,
+        validation, golden fixtures) behaves exactly as if the sizes were
+        literal; parametric analysis (``analyze(k, sizes=symbolic)``) keeps
+        the name symbolic instead."""
+        d = int(default)
+        if name in self._params:
+            if self._params[name] != d:
+                self._diags.append(
+                    f"parameter {name!r}: redeclared with a different "
+                    f"default ({self._params[name]} vs {d})")
+            return AffExpr.var(name)
+        if d <= 0:
+            self._diags.append(f"parameter {name!r}: default must be "
+                               f"positive (got {d})")
+        self._params[name] = d
+        self._kernel = None
+        return AffExpr.var(name)
+
+    def array(self, name: str, *shape) -> ArrayRef:
+        """Declare an array with its extents (each dimension ``[0, ext)``).
+        Extents are integers or affine expressions over declared
+        parameters."""
         if name in self._arrays:
             raise ValueError(f"array {name!r} already declared")
-        ref = ArrayRef(name, tuple(int(e) for e in shape))
+        exts: List[object] = []
+        for e in shape:
+            co = _coerce(e)
+            if isinstance(co, NonAffine):
+                self._diags.append(f"array {name!r}: non-affine extent "
+                                   f"{co.reason}")
+                exts.append(1)
+            elif co.coeffs:
+                bad = [nm for nm in co.vars() if nm not in self._params]
+                if bad:
+                    self._diags.append(
+                        f"array {name!r}: extent {co!r} references "
+                        f"non-parameter variable"
+                        f"{'s' if len(bad) > 1 else ''} "
+                        + ", ".join(map(repr, bad)))
+                exts.append(co)
+            else:
+                exts.append(int(co.const))
+        ref = ArrayRef(name, tuple(exts))
         self._arrays[name] = ref
         self._kernel = None
         return ref
@@ -353,6 +397,9 @@ class Nest:
             self._diags.append(f"loop {name!r}: shadows an open loop of the "
                                f"same name (open loops: "
                                f"{', '.join(open_names)})")
+        if name in self._params:
+            self._diags.append(f"loop {name!r}: shadows the parameter of "
+                               f"the same name")
         cons: List[Constraint] = []
         bounds = []
         for label, bound in (("lower", lo), ("upper", hi)):
@@ -380,7 +427,7 @@ class Nest:
     def _check_scope(self, owner: str, expr: LinExpr, what: str,
                      dims: Sequence[str], kind: str = "statement") -> None:
         for name in expr.vars():
-            if name not in dims:
+            if name not in dims and name not in self._params:
                 scope = ", ".join(dims) if dims else "none"
                 label = owner if kind == "loop" else f"statement {owner!r}"
                 self._diags.append(
@@ -475,8 +522,14 @@ class Nest:
 
     def _domain_diags(self) -> List[str]:
         diags: List[str] = []
+        # validate at the parameter defaults: the spec checks (emptiness,
+        # boundedness) are concrete-size questions and the defaults are the
+        # sizes every concrete path will use
+        env = {p: LinExpr.const_expr(d) for p, d in self._params.items()}
         for s in self._stmts:
-            poly = Polyhedron(s.domain)
+            dom = ([c.substitute(env) for c in s.domain] if env
+                   else s.domain)
+            poly = Polyhedron(dom)
             if poly.is_empty():
                 diags.append(f"statement {s.name!r}: empty iteration domain "
                              f"(no integer point satisfies its bounds)")
@@ -535,7 +588,7 @@ class Nest:
         dom: List[Constraint] = []
         for d, ext in zip(dims, shape):
             dom += [ge(v(d), LinExpr.const_expr(0)),
-                    lt(v(d), LinExpr.const_expr(ext))]
+                    lt(v(d), LinExpr.coerce(ext))]
         access = [Access(arr, tuple(LinExpr.var(d) for d in dims))]
         kwargs = ({"writes": access} if prefix == "load" else
                   {"reads": access})
@@ -558,7 +611,8 @@ class Nest:
         epi = epilogue_c0(p for p, _ in self._root.children)
         stores = [self._boundary(a, rank, epi, "store")
                   for rank, a in enumerate(self._outputs)]
-        self._kernel = Kernel(self.name, {}, loads + body + stores,
+        self._kernel = Kernel(self.name, dict(self._params),
+                              loads + body + stores,
                               arrays={n: r.shape
                                       for n, r in self._arrays.items()})
         return self._kernel

@@ -1,0 +1,84 @@
+"""Polyhedron-memo pinning: bounded half-eviction must not evict entries a
+live symbolic analysis depends on (regression: a long sweep crossing the
+memo limit used to evict a parametric template's verdicts mid-flight)."""
+import pytest
+
+from repro.core import polyhedron as P
+from repro.core.polyhedron import polyhedron_cache_pin
+
+
+@pytest.fixture
+def tiny_memo(monkeypatch):
+    monkeypatch.setattr(P, "_MEMO_LIMIT", 8)
+    saved = dict(P._EMPTY_MEMO)
+    P._EMPTY_MEMO.clear()
+    yield P._EMPTY_MEMO
+    P._EMPTY_MEMO.clear()
+    P._EMPTY_MEMO.update(saved)
+
+
+def test_eviction_skips_pinned_keys(tiny_memo):
+    pin = polyhedron_cache_pin()
+    with pin:
+        for i in range(4):
+            P._memo_put(tiny_memo, ("pinned", i), False)
+    assert pin.keys == {("pinned", i) for i in range(4)}
+    # fill well past the limit: half-evictions must all skip the pinned keys
+    for i in range(40):
+        P._memo_put(tiny_memo, ("loose", i), True)
+    assert all(("pinned", i) in tiny_memo for i in range(4))
+
+
+def test_pinned_reads_are_pinned_too(tiny_memo):
+    P._memo_put(tiny_memo, "warm", False)
+    pin = polyhedron_cache_pin()
+    with pin:
+        hit, val = P._memo_get(tiny_memo, "warm")
+    assert hit and val is False
+    assert "warm" in pin.keys
+    for i in range(40):
+        P._memo_put(tiny_memo, ("loose", i), True)
+    assert "warm" in tiny_memo
+    pin.release()
+
+
+def test_release_makes_keys_evictable_again(tiny_memo):
+    pin = polyhedron_cache_pin()
+    with pin:
+        for i in range(4):
+            P._memo_put(tiny_memo, ("pinned", i), False)
+    pin.release()
+    for i in range(40):
+        P._memo_put(tiny_memo, ("loose", i), True)
+    assert not any(("pinned", i) in tiny_memo for i in range(4))
+
+
+def test_all_pinned_lets_memo_grow_past_limit(tiny_memo):
+    pin = polyhedron_cache_pin()
+    with pin:
+        for i in range(12):
+            P._memo_put(tiny_memo, ("pinned", i), False)
+    assert all(("pinned", i) in tiny_memo for i in range(12))
+    assert len(tiny_memo) == 12 > P._MEMO_LIMIT
+    pin.release()
+
+
+def test_dropped_pin_object_releases_automatically(tiny_memo):
+    pin = polyhedron_cache_pin()
+    with pin:
+        for i in range(4):
+            P._memo_put(tiny_memo, ("pinned", i), False)
+    del pin                      # WeakSet forgets it; keys become evictable
+    for i in range(40):
+        P._memo_put(tiny_memo, ("loose", i), True)
+    assert not any(("pinned", i) in tiny_memo for i in range(4))
+
+
+def test_stats_count_pinned_keys(tiny_memo):
+    pin = polyhedron_cache_pin()
+    with pin:
+        for i in range(3):
+            P._memo_put(tiny_memo, ("pinned", i), False)
+    assert P.polyhedron_cache_stats()["pinned_keys"] == 3
+    pin.release()
+    assert P.polyhedron_cache_stats()["pinned_keys"] == 0

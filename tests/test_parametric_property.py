@@ -1,0 +1,72 @@
+"""Property test: symbolic analysis of random builder programs instantiates,
+at random concrete sizes, to exactly the from-scratch concrete report.
+
+The generated family is a producer→consumer chain over a 1-d array with a
+symbolic extent: random loop-bound offsets, random read shifts (possibly
+multiple reads per element → non-unicity, shifts → reorderings), and a
+random tile size.  That exercises the whole template path — structure
+stability, polynomial fits, pow2 recomputation — plus the fallback path
+when a draw lands off the proved lattice.
+"""
+import json
+import warnings
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analyze, report_payload, symbolic
+from repro.core.parametric import ParametricFallbackWarning
+from repro.core.tiling import Tiling
+from repro.lang import Nest
+
+
+@st.composite
+def chain_programs(draw):
+    pad = draw(st.integers(0, 2))           # producer writes a little extra
+    lo = draw(st.integers(0, 2))            # consumer loop start
+    shifts = draw(st.lists(st.integers(0, lo + 1), min_size=1, max_size=3,
+                           unique=True))    # read offsets a[i - s]
+    b = draw(st.sampled_from([2, 4]))       # tile size
+    two_level = draw(st.booleans())         # tile consumer i and i+shift?
+
+    def build():
+        k = Nest("prop-chain")
+        n = k.param("N", 12)
+        a = k.array("a", n + pad + 2)
+        c = k.array("c", n + pad + 2)
+        with k.loop("i", 0, n + pad) as i:
+            k.stmt("prod", writes=[a[i]])
+        with k.loop("i", lo, n + pad) as i:
+            k.stmt("cons", writes=[c[i]],
+                   reads=[a[i - s] for s in sorted(shifts)])
+        if two_level:
+            k.tile("cons", Tiling(((1,), (1,)), (b, b)))
+        else:
+            k.tile("cons", Tiling(((1,),), (b,)))
+        return k
+
+    return build
+
+
+@given(chain_programs(), st.integers(0, 4))
+@settings(max_examples=12, deadline=None)
+def test_random_chain_symbolic_matches_concrete(build, step):
+    pa = analyze(build(), sizes=symbolic).classify().fifoize().size()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", ParametricFallbackWarning)
+        pa.prepare()
+        if pa.status == "symbolic":
+            t = pa._template
+            n = t["theta"]["N"] + step * t["strides"]["N"]
+        else:
+            n = 12 + 2 * step
+        ev = report_payload(pa.evaluate(N=n))
+    conc = (analyze(build().build(), params={"N": n},
+                    tilings=dict(build().case().tilings))
+            .classify().fifoize().size().report())
+    assert json.dumps(ev, sort_keys=True) == json.dumps(
+        report_payload(conc), sort_keys=True)
+    pa.release()

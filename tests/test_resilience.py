@@ -377,7 +377,7 @@ def test_resilience_evidence_round_trips_through_report(gemm):
     a = _planned("gemm").validate(mode="faults")
     rep = a.report()
     doc = rep.as_dict()
-    assert doc["schema_version"] == SCHEMA_VERSION == 4
+    assert doc["schema_version"] == SCHEMA_VERSION == 5
     assert doc["resilience"]["mode"] == "faults"
     assert doc["resilience"]["counts"]["engine_cases"] > 0
     back = AnalysisReport.from_dict(json.loads(rep.to_json()))

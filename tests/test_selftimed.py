@@ -326,7 +326,7 @@ def test_selftimed_evidence_round_trips_through_analysis_report():
     a = _sized("gemm").plan(topology="sequential").validate(mode="selftimed")
     rep = a.report()
     doc = rep.as_dict()
-    assert doc["schema_version"] == SCHEMA_VERSION == 4
+    assert doc["schema_version"] == SCHEMA_VERSION == 5
     assert doc["selftimed"]["mode"] == "selftimed"
     assert doc["selftimed"]["completed"] is True
     back = AnalysisReport.from_dict(json.loads(rep.to_json()))
