@@ -1,0 +1,142 @@
+"""Design-space-exploration benchmark: the full acceptance grid, with the
+interrupt/resume story measured rather than asserted.
+
+    PYTHONPATH=src python -m benchmarks.bench_dse [--workers N] [--budget K]
+        [--no-measure]
+
+Grid: all 15 PolyBench kernels × 12 rescaled tilings (b = 1..16) × 2
+topologies (sequential, pipeline) × 3 sizes — 1080 design points, the
+`repro.dse.default_experiment` spec verbatim.  Execution uses the process-
+pool manager against a FRESH artifact store (every number below is cold),
+in three acts:
+
+1. **budgeted run** — stops after ``--budget`` new points (the benchmark's
+   stand-in for a mid-sweep kill: the store keeps every completed point);
+2. **resume** — the same ``run()`` call; the store-first check skips
+   everything act 1 persisted and computes only the remainder;
+3. **verification pass** — ``run()`` again; ``computed`` MUST be 0 and
+   ``from_store`` MUST equal the grid size (zero-recompute resume is the
+   subsystem's core claim — ``meets_target`` records it).
+
+jacobi-1d additionally gets measured generated-kernel time (the pallas
+backend's `measure_compiled`, 1 point per group), so the frontier output
+demonstrates both cost axes: roofline-predicted everywhere, measured where
+the backend applies.
+
+Writes BENCH_dse.json: the three run summaries, per-kernel frontier sizes
+with the top frontier points, error/fallback accounting, and totals.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+from pathlib import Path
+from tempfile import mkdtemp
+
+from repro.dse import ArtifactStore, DSEService, default_experiment
+
+BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_dse.json"
+
+DESCRIPTION = (
+    "DSE acceptance grid: 15 PolyBench kernels x 12 tilings (b=1..16) x 2 "
+    "topologies x 3 sizes = 1080 design points, pool manager, fresh store; "
+    "act 1 stops at a point budget (simulated mid-sweep kill), act 2 "
+    "resumes, act 3 re-runs and must compute nothing (zero-recompute "
+    "resume).  Frontiers per kernel over (fifo_fraction, total_slots, "
+    "predicted_s) + measured kernel seconds for jacobi-1d.  Regenerate "
+    "with: PYTHONPATH=src python -m benchmarks.bench_dse")
+
+
+def _frontier_digest(doc: dict) -> dict:
+    out = {}
+    for kernel, kdoc in doc["kernels"].items():
+        fr = kdoc["predicted"]["frontier"]
+        out[kernel] = {
+            "points": kdoc["points"], "errors": kdoc["errors"],
+            "frontier": len(fr),
+            "dominated": len(kdoc["predicted"]["dominated"]),
+            "best": [{"vector": e["vector"],
+                      "tiling": e["point"].get("tiling_id"),
+                      "topology": e["point"].get("topology"),
+                      "sizes": e["point"].get("sizes")}
+                     for e in fr[:3]],
+        }
+        if "measured" in kdoc:
+            out[kernel]["measured_frontier"] = len(
+                kdoc["measured"]["frontier"])
+    return out
+
+
+def run(workers, budget, measure) -> dict:
+    exp = default_experiment(
+        measure=({"kernels": ["jacobi-1d"], "repeats": 2, "max_points": 1}
+                 if measure else None))
+    store = ArtifactStore(mkdtemp(prefix="bench-dse-"))
+    svc = DSEService(exp, store, manager="pool",
+                     manager_kwargs={"max_workers": workers})
+    total = len(exp.points())
+    print(f"grid: {len(exp.groups())} groups, {total} points "
+          f"({len(exp.kernels)} kernels)")
+
+    t0 = time.perf_counter()
+    act1 = svc.run(max_points=budget)
+    print(f"act1 (budget {budget}): computed {act1['computed']} "
+          f"in {act1['seconds']}s, stopped_early={act1['stopped_early']}")
+    act2 = svc.run()
+    print(f"act2 (resume): from_store {act2['from_store']}, "
+          f"computed {act2['computed']} in {act2['seconds']}s")
+    act3 = svc.run()
+    print(f"act3 (verify): from_store {act3['from_store']}, "
+          f"computed {act3['computed']} in {act3['seconds']}s")
+    frontier = svc.frontier()
+    wall = time.perf_counter() - t0
+
+    pts = list(store.iter_points(exp.experiment_id))
+    modes: dict = {}
+    for p in pts:
+        mode = (p.get("provenance") or {}).get("size_mode", "error")
+        modes[mode] = modes.get(mode, 0) + 1
+    zero_recompute = act3["computed"] == 0 and act3["from_store"] == total
+    return {
+        "description": DESCRIPTION,
+        "grid": {"kernels": len(exp.kernels), "groups": act1["groups"],
+                 "points": total,
+                 "tilings_per_kernel": len(exp.tilings["b"]),
+                 "topologies": list(exp.topologies), "sizes_per_tiling": 3},
+        "acts": {"budgeted": act1, "resume": act2, "verify": act3},
+        "size_mode_counts": modes,
+        "errors": sum(1 for p in pts if p.get("error")),
+        "measured_points": sum(1 for p in pts if "measured" in p),
+        "frontiers": _frontier_digest(frontier),
+        "totals": {"wall_seconds": round(wall, 2),
+                   "zero_recompute_resume": zero_recompute,
+                   "meets_target": zero_recompute},
+        "host": {"python": platform.python_version(),
+                 "machine": platform.machine(), "cpus": os.cpu_count(),
+                 "workers": workers},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int,
+                    default=min(8, os.cpu_count() or 2))
+    ap.add_argument("--budget", type=int, default=48,
+                    help="act-1 point budget (the simulated kill)")
+    ap.add_argument("--no-measure", action="store_true")
+    args = ap.parse_args()
+    doc = run(args.workers, args.budget, not args.no_measure)
+    BENCH_PATH.write_text(json.dumps(doc, indent=1) + "\n")
+    t = doc["totals"]
+    print(f"total: {doc['grid']['points']} points, {doc['errors']} errors, "
+          f"{t['wall_seconds']}s wall; zero-recompute resume "
+          f"{'MET' if t['meets_target'] else 'MISSED'}")
+    if not t["meets_target"]:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

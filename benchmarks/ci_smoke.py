@@ -37,12 +37,22 @@ Nine sections, in order:
    (``analyze(case, sizes=symbolic)``) must close without falling back and
    instantiate byte-identically to a from-scratch concrete analysis at 2
    sizes each, within ``PARAMETRIC_BUDGET`` seconds.
-8. **Persistent store**: if ``REPRO_POLY_CACHE`` is set (CI wires it to an
-   `actions/cache` path), the verdict store is loaded here — warming the
-   domain-enumeration boxes for the next section — and saved again at exit.
-9. **Table2 subset**: classifications must match the recorded
-   BENCH_table2.json rows exactly and stay within GUARD_FACTOR of the
-   recorded wall-clock.
+8. **Artifact guard**: every ``benchmarks/bench_*.py`` must have a
+   committed, parseable, non-empty ``BENCH_*.json`` at the repo root (and
+   vice versa) — a benchmark whose recorded artifact is missing or corrupt
+   fails CI, not the next reader.
+9. **DSE smoke**: a 2-kernel × 3-tiling × 2-size design-space run through
+   `repro.dse` against the persistent store (``REPRO_DSE_STORE``; CI wires
+   it under `actions/cache`): budgeted run (the interrupt), resume to
+   completion, a verification pass that must compute **zero** points, and
+   per-kernel Pareto frontiers — all within ``DSE_BUDGET``.  Assertions
+   are count-based so a warm store (cache hit) passes identically.
+10. **Persistent store**: if ``REPRO_POLY_CACHE`` is set (CI wires it to an
+    `actions/cache` path), the verdict store is loaded here — warming the
+    domain-enumeration boxes for the next section — and saved again at exit.
+11. **Table2 subset**: classifications must match the recorded
+    BENCH_table2.json rows exactly and stay within GUARD_FACTOR of the
+    recorded wall-clock.
 """
 from __future__ import annotations
 
@@ -91,7 +101,14 @@ PARAMETRIC_BUDGET = 60.0  # seconds for the parametric section: one symbolic
                           # check; the fallback path counts as a failure
                           # here — these 3 kernels are known to close
 
-BENCH_PATH = Path(__file__).resolve().parent.parent / "BENCH_table2.json"
+DSE_BUDGET = 90.0         # seconds for the DSE section: 24 design points
+                          # (2 kernels x 3 tilings x 2 topologies x 2
+                          # sizes) through run/interrupt/resume/frontier,
+                          # inline manager (measured ~8s cold, ~0.1s when
+                          # the actions/cache store is warm)
+
+REPO = Path(__file__).resolve().parent.parent
+BENCH_PATH = REPO / "BENCH_table2.json"
 CACHE_ENV = "REPRO_POLY_CACHE"
 
 
@@ -326,6 +343,86 @@ def parametric_smoke(failures: list) -> None:
                         f"{PARAMETRIC_BUDGET}s budget")
 
 
+def artifact_guard(failures: list) -> None:
+    """Every bench_*.py ↔ a committed parseable BENCH_*.json, both ways."""
+    benches = {p.stem[len("bench_"):]
+               for p in (REPO / "benchmarks").glob("bench_*.py")}
+    artifacts = {p.stem[len("BENCH_"):] for p in REPO.glob("BENCH_*.json")}
+    for name in sorted(benches - artifacts):
+        failures.append(f"artifacts: benchmarks/bench_{name}.py has no "
+                        f"committed BENCH_{name}.json — run it and commit "
+                        f"the result")
+    for name in sorted(artifacts - benches):
+        failures.append(f"artifacts: BENCH_{name}.json has no "
+                        f"benchmarks/bench_{name}.py to regenerate it")
+    parsed = 0
+    for name in sorted(benches & artifacts):
+        path = REPO / f"BENCH_{name}.json"
+        try:
+            doc = json.loads(path.read_text())
+            if not doc:
+                raise ValueError("empty document")
+            parsed += 1
+        except Exception as e:
+            failures.append(f"artifacts: {path.name} is not parseable "
+                            f"({type(e).__name__}: {e})")
+    status = "ok" if not any(f.startswith("artifacts:")
+                             for f in failures) else "BROKEN"
+    print(f"artifact guard  {len(benches)} benchmarks, {parsed} recorded "
+          f"artifacts parseable {status}")
+
+
+def dse_smoke(failures: list) -> None:
+    import tempfile
+
+    from repro.dse import ArtifactStore, DSEService, default_experiment
+    from repro.dse.store import ENV_STORE
+
+    t0 = time.perf_counter()
+    root = os.environ.get(ENV_STORE) or tempfile.mkdtemp(prefix="ci-dse-")
+    # default name, so CI's `repro.dse status` CLI step (same axes) resolves
+    # to the same experiment id and sees this section's completed store
+    exp = default_experiment(kernels=["gemm", "jacobi-1d"],
+                             tile_sizes=[2, 3, 4], size_count=2)
+    total = len(exp.points())
+    svc = DSEService(exp, ArtifactStore(root), manager="inline")
+    budgeted = svc.run(max_points=6)       # the interrupted first slice
+    resumed = svc.run()                    # store-first: finishes the rest
+    verify = svc.run()                     # must compute NOTHING
+    if resumed["pending"] != 0 or resumed["errors"]:
+        failures.append(f"dse: resume did not complete cleanly ({resumed})")
+    if budgeted["computed"] + budgeted["from_store"] \
+            + resumed["computed"] != total:
+        failures.append(
+            f"dse: interrupt+resume accounting does not cover the grid "
+            f"(budgeted {budgeted['computed']}+{budgeted['from_store']}, "
+            f"resumed {resumed['computed']}, total {total})")
+    if verify["computed"] != 0 or verify["from_store"] != total:
+        failures.append(f"dse: verification pass recomputed "
+                        f"{verify['computed']} points (zero-recompute "
+                        f"resume broken)")
+    frontier = svc.frontier()
+    for kernel in exp.kernels:
+        kdoc = frontier["kernels"].get(kernel)
+        if not kdoc or not kdoc["predicted"]["frontier"]:
+            failures.append(f"dse: no Pareto frontier for {kernel}")
+            continue
+        best = kdoc["predicted"]["frontier"][0]["vector"]
+        if not (0.0 <= best[0] <= 1.0 and best[1] > 0 and best[2] > 0):
+            failures.append(f"dse: degenerate frontier vector {best} "
+                            f"for {kernel}")
+    dt = time.perf_counter() - t0
+    status = "ok" if dt <= DSE_BUDGET else "SLOW"
+    print(f"dse smoke  {total} points (computed "
+          f"{budgeted['computed']}+{resumed['computed']}, store "
+          f"{budgeted['from_store']}), verify recompute "
+          f"{verify['computed']}, frontiers "
+          f"{sum(len(k['predicted']['frontier']) for k in frontier['kernels'].values())}  "
+          f"{dt*1e3:7.1f}ms (budget {DSE_BUDGET*1e3:.0f}ms) {status}")
+    if dt > DSE_BUDGET:
+        failures.append(f"dse: {dt:.1f}s exceeds the {DSE_BUDGET}s budget")
+
+
 def table2_smoke(failures: list) -> None:
     doc = json.loads(BENCH_PATH.read_text())
     recorded = {r["kernel"]: r for r in doc["optimized"]}
@@ -368,14 +465,19 @@ def main() -> int:
         # 7. symbolic templates instantiate byte-identically to concrete
         #    analysis on 3 kernels x 2 sizes
         parametric_smoke(failures)
-        # 8. warm start for the remaining sections, refreshed on the way out
+        # 8. every benchmark's recorded artifact exists and parses
+        artifact_guard(failures)
+        # 9. design-space service: budgeted run -> resume -> zero-recompute
+        #    verify -> frontiers, against the persistent DSE store
+        dse_smoke(failures)
+        # 10. warm start for the remaining sections, refreshed on the way out
         cache_path = os.environ.get(CACHE_ENV)
         if cache_path:
             clear_polyhedron_cache()
             print(f"persistent store: loaded "
                   f"{load_polyhedron_cache(cache_path)} entries "
                   f"from {cache_path}")
-        # 9. table2 classification + timing guard
+        # 11. table2 classification + timing guard
         table2_smoke(failures)
         if cache_path and not failures:
             print(f"persistent store: saved "

@@ -24,8 +24,9 @@ from .patterns import (ChannelClassifier, Pattern, ProcSpace, classify_channel,
                        in_order_symbolic, unicity_symbolic)
 from .polyhedron import (FMBlowup, Polyhedron, clear_polyhedron_cache,
                          export_polyhedron_cache, load_polyhedron_cache,
-                         merge_polyhedron_cache, polyhedron_cache_pin,
-                         polyhedron_cache_stats, save_polyhedron_cache)
+                         merge_polyhedron_cache, peek_polyhedron_cache,
+                         polyhedron_cache_pin, polyhedron_cache_stats,
+                         save_polyhedron_cache)
 from .ppn import PPN, Channel, DomainIndex, Process
 from .registry import resolve_case
 from .relation import Relation
@@ -53,7 +54,8 @@ __all__ = [
     "clear_polyhedron_cache", "direct_dependences", "eq",
     "export_polyhedron_cache", "fifoize", "fifoize_relation", "floor_div",
     "ge", "gt", "in_order_symbolic", "le", "load_polyhedron_cache", "lt",
-    "epilogue_c0", "merge_polyhedron_cache", "polyhedron_cache_pin",
+    "epilogue_c0", "merge_polyhedron_cache", "peek_polyhedron_cache",
+    "polyhedron_cache_pin",
     "polyhedron_cache_stats",
     "pow2_size", "rectangular", "report_payload", "rescale_tilings",
     "resolve_case",

@@ -917,12 +917,20 @@ class ParametricAnalysis:
             return self._fallback(
                 f"probe grid too large (degrees {degrees})")
         base = {}
-        for attempt in range(self.probe_attempts):
-            base = {p: int(self.kernel.params[p]) + attempt * strides[p]
-                    for p in sym}
-            t = self._attempt(base, degrees, strides)
-            if t is not None:
-                return t
+        base_strides = strides
+        # The per-hyperplane lcm is a *divisor* of the true Ehrhart
+        # quasi-period; cross-hyperplane interaction (cholesky's triangular
+        # tiles) can double it, so after every base shift fails on the
+        # natural lattice, retry once on the doubled one (each residue class
+        # of the coarser lattice is a single polynomial branch again).
+        for scale in (1, 2):
+            strides = {p: base_strides[p] * scale for p in sym}
+            for attempt in range(self.probe_attempts):
+                base = {p: int(self.kernel.params[p]) + attempt * strides[p]
+                        for p in sym}
+                t = self._attempt(base, degrees, strides)
+                if t is not None:
+                    return t
         return self._fallback(
             f"report structure or closed forms not stable on the probe "
             f"lattices up to base {base}")

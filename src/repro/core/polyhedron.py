@@ -275,6 +275,24 @@ def save_polyhedron_cache(path: str) -> int:
     return n
 
 
+def peek_polyhedron_cache(path: str) -> Optional[Dict[str, int]]:
+    """Version + per-memo entry counts of a `save_polyhedron_cache` file
+    WITHOUT merging it (the `repro.dse status` / artifact-store probe).
+    Returns None for missing/corrupt/version-mismatched files — the same
+    cases `load_polyhedron_cache` treats as a cold start."""
+    try:
+        with open(path, "rb") as fh:
+            snapshot = pickle.load(fh)
+        if (not isinstance(snapshot, Mapping)
+                or snapshot.get("version") != CACHE_VERSION):
+            return None
+        return {"version": snapshot["version"],
+                **{k: len(snapshot.get(k, ())) for k in ("empty", "point",
+                                                         "box")}}
+    except Exception:
+        return None
+
+
 def load_polyhedron_cache(path: str) -> int:
     """Merge a `save_polyhedron_cache` file into the in-memory caches.
     Missing, corrupt, or version-mismatched files are ignored (returns 0) —

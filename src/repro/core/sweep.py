@@ -146,18 +146,48 @@ class SweepJob:
     topology: str = "sequential"
 
 
+def _job_error(job: SweepJob, index: int, exc: BaseException
+               ) -> Dict[str, Any]:
+    """The named per-configuration error record `run_job` emits in place of
+    a report when one configuration fails."""
+    return {"error": {"kernel": job.kernel, "config_index": index,
+                      "type": type(exc).__name__, "message": str(exc)}}
+
+
 def run_job(job: SweepJob) -> List[Dict[str, Any]]:
-    """Execute one job in-process; reports as plain dicts (JSON/pickle-safe)."""
+    """Execute one job in-process; reports as plain dicts (JSON/pickle-safe).
+
+    Failures are **contained per configuration**: a configuration whose
+    analysis raises yields ``{"error": {"kernel", "config_index", "type",
+    "message"}}`` in its slot and the remaining configurations still run —
+    one degenerate tiling cannot kill a fleet sweep.  A job-level failure
+    (unknown kernel name, dataflow-oracle error) fills every slot with the
+    same record.  Successful slots are unchanged: the same report dicts a
+    fresh per-tiling ``analyze()`` would produce."""
     from .polybench import get
-    case = get(job.kernel, job.scale)
-    reports = sweep(case.kernel, job.tilings, stages=job.stages,
-                    pow2=job.pow2, topology=job.topology)
-    return [r.as_dict() for r in reports]
+    try:
+        case = get(job.kernel, job.scale)
+        base = analyze(case.kernel)            # dataflow oracle runs ONCE
+    except Exception as e:
+        return [_job_error(job, i, e) for i in range(len(job.tilings))]
+    out: List[Dict[str, Any]] = []
+    for i, cfg in enumerate(job.tilings):
+        try:
+            a = _run_stages(base.retile(cfg), job.stages, job.pow2,
+                            job.topology)
+            out.append(a.report().as_dict())
+        except Exception as e:
+            out.append(_job_error(job, i, e))
+    return out
 
 
 def _pool_worker(payload) -> Tuple[int, List[Dict[str, Any]], Dict]:
     index, job = payload
-    return index, run_job(job), export_polyhedron_cache()
+    try:
+        return index, run_job(job), export_polyhedron_cache()
+    except BaseException as e:      # run_job contains per-config failures;
+        return index, [_job_error(job, i, e)     # this guards the plumbing
+                       for i in range(len(job.tilings))], {}
 
 
 def sweep_parallel(jobs: Sequence[SweepJob],
@@ -169,7 +199,9 @@ def sweep_parallel(jobs: Sequence[SweepJob],
     back afterwards, so sweeping in parallel leaves the parent exactly as
     warm as sweeping serially — and a following `save_polyhedron_cache`
     persists the union.  Reports are unchanged by parallelism (each job is
-    computed independently)."""
+    computed independently).  Failures follow `run_job`'s contract: a bad
+    configuration (or a job that dies wholesale) comes back as named
+    ``{"error": ...}`` records in its slots, never as a pool exception."""
     if not jobs:
         return []
     init, initargs = None, ()
@@ -181,6 +213,6 @@ def sweep_parallel(jobs: Sequence[SweepJob],
         for index, reports, worker_cache in pool.map(
                 _pool_worker, list(enumerate(jobs))):
             out[index] = reports
-            if share_cache:
+            if share_cache and worker_cache:
                 merge_polyhedron_cache(worker_cache)
     return out

@@ -25,3 +25,5 @@ def make_host_mesh(data: int = 2, model: int = 2):
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
 HBM_BW = 819e9                # B/s
 ICI_BW = 50e9                 # B/s per link
+VMEM_BW = 8e12                # B/s on-chip scratch (order of magnitude: the
+                              # VMEM-vs-HBM gap the FIFO recovery monetizes)
